@@ -1,0 +1,53 @@
+//! Quickstart: load the AOT artifacts, submit a batch of FFTs through the
+//! fault-tolerant coordinator, verify the numbers.
+//!
+//!     make artifacts            # once (lowers the JAX/Pallas kernels)
+//!     cargo run --release --example quickstart
+
+use turbofft::coordinator::{Config, Coordinator};
+use turbofft::runtime::{Precision, Runtime, Scheme};
+use turbofft::signal::{complex, fft};
+use turbofft::util::rng::Rng;
+use turbofft::workload::signals;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the runtime loads artifacts/manifest.json and owns the PJRT device
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    println!(
+        "loaded {} artifacts (profile {})",
+        rt.manifest.entries.len(),
+        rt.manifest.profile
+    );
+
+    // 2. a coordinator with the paper's threadblock-level two-sided
+    //    checksum scheme: every request is transparently verified
+    let coord = Coordinator::new(&rt, Config {
+        scheme: Scheme::FtBlock,
+        ..Default::default()
+    })?;
+
+    // 3. submit a batch of random signals
+    let n = 1024;
+    let mut rng = Rng::new(2024);
+    let mut inputs = Vec::new();
+    let mut pending = Vec::new();
+    for _ in 0..32 {
+        let x = signals::gaussian_batch(&mut rng, 1, n);
+        inputs.push(x.clone());
+        pending.push(coord.submit(Precision::F32, x));
+    }
+
+    // 4. collect + verify against the independent native-rust FFT
+    let mut worst = 0.0f64;
+    for (x, rx) in inputs.iter().zip(pending) {
+        let resp = rx.recv()?.map_err(|e| anyhow::anyhow!(e.message))?;
+        let want = fft::fft(x);
+        let err = complex::max_abs_diff(&resp.data, &want) / complex::max_abs(&want);
+        worst = worst.max(err);
+    }
+    println!("32 x {n}-point FFTs served; worst relative error {worst:.2e}");
+    println!("\n{}", coord.metrics.report());
+    assert!(worst < 1e-3);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Serving e2e driver (the DESIGN.md end-to-end validation run):
+//! replay a Poisson arrival trace of mixed-size FFT requests through the
+//! full stack — batcher -> plan router -> PJRT device -> fault manager —
+//! and report latency/throughput like a serving-systems evaluation.
+//!
+//!     cargo run --release --example serving [rate] [secs]
+
+use std::time::{Duration, Instant};
+
+use turbofft::coordinator::{BatchPolicy, Config, Coordinator, FtStatus};
+use turbofft::runtime::{Precision, Runtime, Scheme};
+use turbofft::signal::complex::C64;
+use turbofft::util::rng::Rng;
+use turbofft::util::stats::Summary;
+use turbofft::workload::{signals, trace};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rate: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(300.0);
+    let secs: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1.5);
+
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let available = rt.manifest.sizes();
+    let mix: Vec<(usize, f64)> = [(256usize, 0.5), (1024, 0.3), (4096, 0.2)]
+        .into_iter()
+        .filter(|(n, _)| available.contains(n))
+        .collect();
+    anyhow::ensure!(!mix.is_empty(), "no servable sizes (run `make artifacts`)");
+
+    let coord = Coordinator::new(&rt, Config {
+        scheme: Scheme::FtBlock,
+        policy: BatchPolicy {
+            target_batch: 16,
+            max_delay: Duration::from_millis(2),
+        },
+        ..Default::default()
+    })?;
+
+    // warm every plan (compile outside the measured window)
+    for &(n, _) in &mix {
+        coord
+            .submit_sync(Precision::F32, vec![C64::ONE; n])
+            .map_err(|e| anyhow::anyhow!(e.message))?;
+    }
+
+    let events = trace::generate(&trace::TraceConfig {
+        rate,
+        size_mix: mix.clone(),
+        duration_secs: secs,
+        seed: 2024,
+    });
+    println!(
+        "replaying {} arrivals over {secs}s (~{rate}/s), sizes {:?}",
+        events.len(),
+        mix.iter().map(|&(n, _)| n).collect::<Vec<_>>()
+    );
+
+    let mut rng = Rng::new(5150);
+    let start = Instant::now();
+    let mut pending = Vec::with_capacity(events.len());
+    for ev in &events {
+        let target = Duration::from_secs_f64(ev.at);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        pending.push((
+            ev.n,
+            coord.submit(Precision::F32, signals::gaussian_batch(&mut rng, 1, ev.n)),
+        ));
+    }
+
+    let mut by_size: std::collections::BTreeMap<usize, Summary> = Default::default();
+    let mut verified = 0usize;
+    let mut ok = 0usize;
+    for (n, rx) in pending {
+        if let Ok(Ok(resp)) = rx.recv() {
+            ok += 1;
+            if resp.ft == FtStatus::Verified {
+                verified += 1;
+            }
+            by_size
+                .entry(n)
+                .or_default()
+                .push(resp.latency.as_secs_f64() * 1e3);
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    println!(
+        "\nserved {ok}/{} requests in {wall:.2}s -> {:.0} req/s ({verified} checksum-verified)",
+        events.len(),
+        ok as f64 / wall
+    );
+    println!("\nper-size latency (ms):");
+    println!("{:>8} {:>8} {:>9} {:>9} {:>9}", "N", "count", "p50", "p95", "p99");
+    for (n, s) in &by_size {
+        println!(
+            "{n:>8} {:>8} {:>9.2} {:>9.2} {:>9.2}",
+            s.len(),
+            s.percentile(50.0),
+            s.percentile(95.0),
+            s.percentile(99.0)
+        );
+    }
+    println!("\n{}", coord.metrics.report());
+    anyhow::ensure!(ok == events.len(), "dropped requests");
+    println!("\nserving OK");
+    Ok(())
+}

@@ -1,0 +1,198 @@
+"""AOT lowering: every configured TurboFFT variant -> artifacts/*.hlo.txt.
+
+This is the ONLY place Python touches the request path, and it runs once
+(`make artifacts`). Each variant is lowered to **HLO text** — not a
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids that the runtime's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Alongside the HLO files we write ``manifest.json``, the contract with the
+rust runtime: one entry per artifact with the full kernel parameterization
+and the input/output shapes (the output is always a single tuple because
+we lower with ``return_tuple=True``).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--profile dev|full] [--only REGEX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # f64 variants need x64
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import codegen, model  # noqa: E402
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(name: str, fn, specs: list) -> tuple[str, list, list]:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    outs = jax.eval_shape(fn, *specs)
+    return text, [_shape_entry(s) for s in specs], [_shape_entry(o) for o in outs]
+
+
+# ---------------------------------------------------------------------------
+# Variant tables
+# ---------------------------------------------------------------------------
+
+#: (sizes, precisions) per profile. Staged sizes exercise the 2- and
+#: 3-launch regimes (paper Table I, scaled: 1 stage <= 2^12,
+#: 2 stages <= 2^16, 3 stages above — DESIGN.md §1).
+PROFILES = {
+    # fast enough for CI / pytest round-trips
+    "dev": {
+        "sizes": [64, 256, 1024],
+        "precisions": ["f32"],
+        "schemes": ["noft", "onesided", "ft_thread", "ft_block"],
+        "total_elems": 1 << 14,
+        "aux_sizes": [256],
+        "extra": [],
+    },
+    # the evaluation matrix used by the benches
+    "full": {
+        "sizes": [64, 256, 1024, 4096, 16384, 65536, 262144],
+        "precisions": ["f32", "f64"],
+        "schemes": ["noft", "onesided", "ft_thread", "ft_block"],
+        "total_elems": 1 << 20,
+        "aux_sizes": [64, 256, 1024, 4096, 16384, 65536, 262144],
+        "extra": ["vklike", "naive_v0", "serving"],
+    },
+}
+
+#: vklike only covers the single-kernel + 2-stage regime (like VkFFT's
+#: single-upload sizes); naive_v0 only small sizes (it is log2(N)+1
+#: launches of radix-2 — the point is how slow that is, not running it big)
+VKLIKE_MAX = 65536
+NAIVE_MAX = 1024
+
+#: dedicated low-latency serving variants: small fixed batch per call
+SERVING_BATCH = 16
+SERVING_SIZES = [256, 1024, 4096]
+
+
+def build_variants(profile: str):
+    """Yield (name, fn, specs, meta) for every artifact in the profile."""
+    p = PROFILES[profile]
+    for prec in p["precisions"]:
+        for n in p["sizes"]:
+            batch = codegen.throughput_batch(n, p["total_elems"])
+            for scheme in p["schemes"]:
+                cfg = codegen.default_config(n, prec, scheme, batch)
+                fn, specs = model.BUILDERS[scheme](cfg)
+                yield cfg.name, fn, specs, _meta(cfg, "fft")
+            if "vklike" in p["extra"] and n <= VKLIKE_MAX:
+                cfg = codegen.default_config(n, prec, "vklike", batch)
+                fn, specs = model.BUILDERS["vklike"](cfg)
+                yield cfg.name, fn, specs, _meta(cfg, "fft")
+            if "naive_v0" in p["extra"] and n <= NAIVE_MAX and prec == "f32":
+                cfg = codegen.default_config(n, prec, "noft", batch)
+                fn, specs = model.build_naive_v0(cfg)
+                yield f"fft_naive_v0_n{n}_b{batch}_{prec}", fn, specs, \
+                    _meta(cfg, "fft", scheme_override="naive_v0")
+        for n in p["aux_sizes"]:
+            batch = codegen.throughput_batch(n, p["total_elems"])
+            cfg = codegen.default_config(n, prec, "noft", batch)
+            fn, specs = model.build_correction(cfg)
+            yield f"correct_n{n}_{prec}", fn, specs, _meta(cfg, "correct")
+            fn, specs = model.build_checksum(cfg)
+            yield f"checksum_n{n}_b{batch}_{prec}", fn, specs, \
+                _meta(cfg, "checksum")
+            fn, specs = model.build_xlafft(cfg)
+            yield f"xlafft_n{n}_b{batch}_{prec}", fn, specs, \
+                _meta(cfg, "fft", scheme_override="xlafft")
+        if "serving" in p["extra"]:
+            for n in SERVING_SIZES:
+                for scheme in ("noft", "ft_block", "ft_thread", "onesided"):
+                    cfg = codegen.default_config(n, prec, scheme,
+                                                 SERVING_BATCH)
+                    fn, specs = model.BUILDERS[scheme](cfg)
+                    yield f"serve_{cfg.name}", fn, specs, _meta(cfg, "fft")
+
+
+def _meta(cfg: codegen.KernelConfig, op: str, scheme_override=None) -> dict:
+    return {
+        "op": op,
+        "scheme": scheme_override or cfg.scheme,
+        "n": cfg.n,
+        "precision": cfg.precision,
+        "batch": cfg.batch,
+        "bs": cfg.bs,
+        "tiles": cfg.tiles,
+        "factors": list(cfg.factors),
+        "stages": cfg.stages,
+        "split_radix": cfg.split_radix,
+        "base_max": cfg.base_max,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True, help="artifacts directory")
+    ap.add_argument("--profile",
+                    default=os.environ.get("TURBOFFT_PROFILE", "dev"),
+                    choices=sorted(PROFILES))
+    ap.add_argument("--only", default=None,
+                    help="regex filter on artifact names")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    flt = re.compile(args.only) if args.only else None
+    if not flt:  # full regeneration: drop stale artifacts
+        for old in os.listdir(args.out):
+            if old.endswith(".hlo.txt"):
+                os.remove(os.path.join(args.out, old))
+    entries = []
+    t0 = time.time()
+    for name, fn, specs, meta in build_variants(args.profile):
+        if flt and not flt.search(name):
+            continue
+        t1 = time.time()
+        text, ins, outs = lower_entry(name, fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "file": fname, **meta,
+                        "inputs": ins, "outputs": outs})
+        print(f"  {name}: {len(text)/1024:.0f} KiB "
+              f"({time.time()-t1:.1f}s)", file=sys.stderr)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "profile": args.profile,
+        "correction_k": codegen.CORRECTION_K,
+        "max_tile_n": model.stockham.MAX_TILE_N,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts to {args.out} "
+          f"in {time.time()-t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,128 @@
+"""Template-based kernel/model configuration (paper §IV-B3, Table I).
+
+A hard-coded FFT kernel degrades off its design point, and writing each
+2-3k-LOC kernel by hand is impractical — the paper's answer is a template
++ parameter table, and so is ours. A :class:`KernelConfig` is the full
+parameter vector (N1..N3 kernel-level cube, bs signals per tile, split
+radix, thread-level base radix, precision, checksum scheme); the builders
+in ``model.py`` instantiate the Pallas/JAX template for any config, and
+:func:`default_config` is the semi-empirical parameter table that plays
+the role of the paper's Table I.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .kernels import twiddle as tw
+from .kernels.stockham import MAX_TILE_N
+
+SCHEMES = ("noft", "onesided", "ft_thread", "ft_block", "vklike")
+PRECISIONS = ("f32", "f64")
+
+#: batched corrections per correction-kernel launch (delayed batched
+#: correction, §III-B); the coordinator pads partial batches.
+CORRECTION_K = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Complete parameter vector for one generated FFT executable."""
+
+    n: int                      # FFT size (power of two)
+    precision: str              # "f32" | "f64"
+    scheme: str                 # see SCHEMES
+    batch: int                  # total signals per executable call
+    bs: int                     # signals per tile (threadblock batch)
+    factors: tuple              # kernel-level cube N1 x N2 (x N3)
+    split_radix: int = 8        # recursive split radix
+    base_max: int = tw.BASE_RADIX_MAX  # thread-level dense radix
+
+    def __post_init__(self):
+        if self.n & (self.n - 1) != 0:
+            raise ValueError(f"N must be a power of two, got {self.n}")
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"unknown precision {self.precision}")
+        if self.batch % self.bs != 0:
+            raise ValueError(f"batch {self.batch} % bs {self.bs} != 0")
+        prod = 1
+        for f in self.factors:
+            prod *= f
+        if prod != self.n:
+            raise ValueError(f"factors {self.factors} do not multiply to {self.n}")
+
+    @property
+    def tiles(self) -> int:
+        return self.batch // self.bs
+
+    @property
+    def stages(self) -> int:
+        """Kernel-launch count analog (1, 2 or 3 — paper §IV-B3)."""
+        return len(self.factors)
+
+    @property
+    def name(self) -> str:
+        return f"fft_{self.scheme}_n{self.n}_b{self.batch}_{self.precision}"
+
+    @property
+    def dtype(self):
+        import jax.numpy as jnp
+        return jnp.float32 if self.precision == "f32" else jnp.float64
+
+
+def tile_bs(n: int) -> int:
+    """ABFT signals per tile — the Table-I 'bs' column. This is the
+    checksum granularity; the kernels pack `groups_per_program` of these
+    tiles into one grid program for throughput (EXPERIMENTS.md §Perf)."""
+    if n <= 64:
+        return 32
+    if n <= 256:
+        return 16
+    if n <= 1024:
+        return 8
+    return 4
+
+
+def throughput_batch(n: int, total_elems: int = 1 << 20,
+                     max_batch: int = 4096) -> int:
+    """Total signals per call, holding batch*N ~= total_elems (the scaled
+    analog of the paper's fixed 2^28-element workloads, DESIGN.md §1)."""
+    b = max(1, total_elems // n)
+    b = min(b, max_batch)
+    # round down to a multiple of the tile batch (power of two, so exact)
+    bs = tile_bs(min(n, MAX_TILE_N))
+    return max(bs, (b // bs) * bs)
+
+
+def default_config(n: int, precision: str = "f32", scheme: str = "noft",
+                   batch: int | None = None) -> KernelConfig:
+    """The semi-empirical parameter table (Table I analog)."""
+    factors = tuple(tw.kernel_factors(n, MAX_TILE_N))
+    if len(factors) == 1:
+        bs = tile_bs(n)
+    else:
+        # staged FFTs tile each stage internally; the outer batch just
+        # needs to exist. bs here tracks the checksum tile granularity:
+        # the whole call is one ABFT tile for staged sizes (DESIGN.md §3).
+        bs = batch if batch is not None else throughput_batch(n)
+    if batch is None:
+        batch = throughput_batch(n)
+    if len(factors) > 1:
+        bs = batch  # one ABFT tile per call for staged sizes
+    bs = min(bs, batch)
+    return KernelConfig(n=n, precision=precision, scheme=scheme,
+                        batch=batch, bs=bs, factors=factors)
+
+
+def table1_rows():
+    """The parameter table reported as our Table I analog."""
+    rows = []
+    for n in (1 << 10, 1 << 14, 1 << 17):
+        cfg = default_config(n)
+        row = {"N": n, "factors": cfg.factors, "bs": cfg.bs,
+               "split_radix": cfg.split_radix, "base_max": cfg.base_max,
+               "stages": cfg.stages}
+        rows.append(row)
+    return rows

@@ -1,0 +1,52 @@
+"""Split-complex (separate re/im float arrays) arithmetic helpers.
+
+The rust boundary carries interleaved real arrays [..., 2]; inside the
+kernels we keep re and im as *separate* float arrays — the analog of the
+paper's float2/double2 register pairs, and what makes the FP32/FP64
+template instantiation trivial (§IV-B3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def split(x):
+    """Interleaved [..., 2] -> (re, im)."""
+    return x[..., 0], x[..., 1]
+
+
+def merge(re, im):
+    """(re, im) -> interleaved [..., 2]."""
+    return jnp.stack([re, im], axis=-1)
+
+
+def cmul(ar, ai, br, bi):
+    """Elementwise complex multiply."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def cmatmul(ar, ai, wr, wi):
+    """Complex matmul along the last axis: (a @ w) for a [..., n], w [n, k].
+
+    This is the thread-level dense radix DFT — on a real TPU the four real
+    matmuls map straight onto the MXU systolic array (the tensor-core/WMMA
+    analog the paper's thread-level macro kernel targets).
+    """
+    yr = jnp.matmul(ar, wr) - jnp.matmul(ai, wi)
+    yi = jnp.matmul(ar, wi) + jnp.matmul(ai, wr)
+    return yr, yi
+
+
+def cdot(ar, ai, br, bi, axis=-1):
+    """Complex dot product reduction along `axis`."""
+    pr = ar * br - ai * bi
+    pi = ar * bi + ai * br
+    return jnp.sum(pr, axis=axis), jnp.sum(pi, axis=axis)
+
+
+def const_pair(c: np.ndarray, dtype) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bake a numpy complex array as a pair of trace-time float constants."""
+    return (jnp.asarray(np.ascontiguousarray(c.real), dtype=dtype),
+            jnp.asarray(np.ascontiguousarray(c.imag), dtype=dtype))

@@ -1,0 +1,279 @@
+"""Two-sided checksum FFT kernels with the ABFT fully fused (paper §IV-B).
+
+Two schemes, matching the paper's design ladder (Figs 5, 6, 12, 13, 19):
+
+* **thread-level** (`ft_thread_batched`): every signal carries its own
+  left-side checksum pair (d_b = (e1^T W) x_b before, s_b = e1^T y_b
+  after). Detection is per-signal — redundant compute across lanes, the
+  analog of Fig 5's per-thread checksums (13.4% overhead in the paper).
+
+* **threadblock-level** (`ft_block_batched`): the tile's signals are first
+  linearly combined into the right-side composites c2 = X e2 (e2 = 1s) and
+  c3 = X e3 (e3 = 1..bs) *while the data is being loaded* (register-reuse
+  analog), and only the composites are checksummed — two length-N dot
+  products per tile instead of 2*bs. Location comes from the quotient
+  r3/r2 = i+1 (Fig 2, green region; 8.9% overhead in the paper).
+
+Both ship the information needed for **delayed batched correction**
+(paper §III-B) back to the L3 coordinator: the input composite c2 and the
+output composite yc2. The correction value for the whole corrupted signal
+is Delta = FFT(c2) - yc2 (linearity + SEU), evaluated *later*, batched, in
+a dedicated correction kernel (`correction_batched`) — no recomputation,
+no pipeline stall.
+
+All checksum reductions stay inside the VMEM tile (the warp-shuffle
+analog): zero extra HBM traffic — the property that makes the threadblock
+scheme the cheapest in the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import cplx
+from . import inject
+from . import stockham
+from . import twiddle as tw
+
+# meta vector layout (per tile, float): see rust/src/coordinator/ft.rs
+META_LEN = 8  # [r2_re, r2_im, |a2|, r3_re, r3_im, |a3|, 0, 0]
+PSIG_LEN = 4  # per-signal: [r_re, r_im, |d_b|, 0]
+
+
+def _cabs(re, im):
+    return jnp.sqrt(re * re + im * im)
+
+
+def _ft_block_body(x_ref, inj_ref, y_ref, meta_ref, c2_ref, yc2_ref,
+                   *, bs: int, split_radix: int):
+    # One grid program hosts `gs` ABFT tiles of `bs` signals each — the
+    # analog of one GPU kernel running many threadblocks. All checksum
+    # math is vectorized over the leading group axis.
+    xr, xi = cplx.split(x_ref[...])
+    gb, n = xr.shape
+    gs = gb // bs
+    dtype = xr.dtype
+    inj = inj_ref[...]
+    tile = pl.program_id(0)
+
+    gxr = xr.reshape(gs, bs, n)
+    gxi = xi.reshape(gs, bs, n)
+
+    # --- input-side encoding (before any fault can strike) --------------
+    w3 = jnp.arange(1, bs + 1, dtype=dtype)[None, :, None]  # e3 weights
+    c2r, c2i = jnp.sum(gxr, axis=1), jnp.sum(gxi, axis=1)          # [gs, n]
+    c3r, c3i = jnp.sum(w3 * gxr, axis=1), jnp.sum(w3 * gxi, axis=1)
+    ar, ai = tw.ew_row_jnp(n, dtype)  # a = e1^T W, closed form
+    a2r, a2i = cplx.cdot(ar[None], ai[None], c2r, c2i)             # [gs]
+    a3r, a3i = cplx.cdot(ar[None], ai[None], c3r, c3i)
+
+    # --- FFT with fault-injection hooks ---------------------------------
+    # the descriptor's tile index addresses ABFT tiles: tile t of this
+    # program covers global tile (program*gs + g), signal row g*bs+s
+    prog_tile0 = tile.astype(jnp.int32) * jnp.int32(gs)
+    inj_local = jnp.stack([
+        inj[0], jnp.int32(0),
+        (inj[1] - prog_tile0) * bs + inj[2],  # flat row within program
+        inj[3], inj[4], inj[5], inj[6], inj[7]])
+    hit_this_prog = (inj[1] >= prog_tile0) & (inj[1] < prog_tile0 + gs)
+    inj_local = jnp.where(hit_this_prog, inj_local,
+                          jnp.zeros_like(inj_local))
+    zero = jnp.asarray(0, jnp.int32)
+    xr, xi = inject.apply(xr, xi, inj_local, stage=inject.STAGE_INPUT,
+                          tile_idx=zero)
+    yr, yi = stockham.fft_tile(xr, xi, split_radix=split_radix)
+    yr, yi = inject.apply(yr, yi, inj_local, stage=inject.STAGE_OUTPUT,
+                          tile_idx=zero)
+
+    gyr = yr.reshape(gs, bs, n)
+    gyi = yi.reshape(gs, bs, n)
+
+    # --- output-side encoding -------------------------------------------
+    yc2r, yc2i = jnp.sum(gyr, axis=1), jnp.sum(gyi, axis=1)
+    yc3r, yc3i = jnp.sum(w3 * gyr, axis=1), jnp.sum(w3 * gyi, axis=1)
+    e1r, e1i = tw.wang_e1_jnp(n, dtype)
+    s2r, s2i = cplx.cdot(e1r[None], e1i[None], yc2r, yc2i)
+    s3r, s3i = cplx.cdot(e1r[None], e1i[None], yc3r, yc3i)
+
+    r2r, r2i = s2r - a2r, s2i - a2i
+    r3r, r3i = s3r - a3r, s3i - a3i
+
+    y_ref[...] = cplx.merge(yr, yi)
+    meta_ref[...] = jnp.stack(
+        [r2r, r2i, _cabs(a2r, a2i), r3r, r3i, _cabs(a3r, a3i),
+         jnp.zeros_like(r2r), jnp.zeros_like(r2r)], axis=-1)[None]
+    c2_ref[...] = cplx.merge(c2r, c2i)[None]
+    yc2_ref[...] = cplx.merge(yc2r, yc2i)[None]
+
+
+def groups_per_program(bs: int, n: int, batch: int) -> int:
+    """ABFT tiles hosted per grid program: sized so one program touches
+    ~64k signal elements (the CPU-substrate analog of filling an SM's
+    occupancy; see EXPERIMENTS.md §Perf for the measured sweep)."""
+    target = max(1, (1 << 16) // max(bs * n, 1))
+    total_tiles = max(1, batch // bs)
+    gs = 1
+    while gs * 2 <= target and total_tiles % (gs * 2) == 0:
+        gs *= 2
+    return gs
+
+
+def ft_block_batched(x, inj, *, bs: int, split_radix: int = 8):
+    """Threadblock-level two-sided ABFT FFT.
+
+    x: [B, N, 2]; inj: int32[8]. Returns (y [B,N,2], meta [T,8],
+    c2 [T,N,2], yc2 [T,N,2]) with T = B // bs ABFT tiles. Internally the
+    grid packs `gs` tiles per program (pure performance; the checksum
+    granularity is unchanged).
+    """
+    b, n, _ = x.shape
+    if b % bs != 0:
+        raise ValueError(f"batch {b} not divisible by tile bs={bs}")
+    tiles = b // bs
+    gs = groups_per_program(bs, n, b)
+    progs = tiles // gs
+    gb = gs * bs
+    kernel = functools.partial(_ft_block_body, bs=bs, split_radix=split_radix)
+    y, meta, c2, yc2 = pl.pallas_call(
+        kernel,
+        grid=(progs,),
+        in_specs=[
+            pl.BlockSpec((gb, n, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((inject.DESC_LEN,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((gb, n, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, gs, META_LEN), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, gs, n, 2), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, gs, n, 2), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n, 2), x.dtype),
+            jax.ShapeDtypeStruct((progs, gs, META_LEN), x.dtype),
+            jax.ShapeDtypeStruct((progs, gs, n, 2), x.dtype),
+            jax.ShapeDtypeStruct((progs, gs, n, 2), x.dtype),
+        ],
+        interpret=True,
+    )(x, inj)
+    return (y, meta.reshape(tiles, META_LEN),
+            c2.reshape(tiles, n, 2), yc2.reshape(tiles, n, 2))
+
+
+def _ft_thread_body(x_ref, inj_ref, y_ref, psig_ref, c2_ref, yc2_ref,
+                    *, bs: int, split_radix: int):
+    # group-vectorized like _ft_block_body: gs ABFT tiles per program
+    xr, xi = cplx.split(x_ref[...])
+    gb, n = xr.shape
+    gs = gb // bs
+    dtype = xr.dtype
+    inj = inj_ref[...]
+    tile = pl.program_id(0)
+
+    # per-signal left checksums (redundant across lanes — the point of the
+    # comparison with the block scheme)
+    ar, ai = tw.ew_row_jnp(n, dtype)
+    dr, di = cplx.cdot(ar[None, :], ai[None, :], xr, xi, axis=-1)  # [gb]
+    # right-side composites still accumulated for delayed correction
+    gxr = xr.reshape(gs, bs, n)
+    gxi = xi.reshape(gs, bs, n)
+    c2r, c2i = jnp.sum(gxr, axis=1), jnp.sum(gxi, axis=1)  # [gs, n]
+
+    prog_tile0 = tile.astype(jnp.int32) * jnp.int32(gs)
+    inj_local = jnp.stack([
+        inj[0], jnp.int32(0),
+        (inj[1] - prog_tile0) * bs + inj[2],
+        inj[3], inj[4], inj[5], inj[6], inj[7]])
+    hit = (inj[1] >= prog_tile0) & (inj[1] < prog_tile0 + gs)
+    inj_local = jnp.where(hit, inj_local, jnp.zeros_like(inj_local))
+    zero = jnp.asarray(0, jnp.int32)
+    xr, xi = inject.apply(xr, xi, inj_local, stage=inject.STAGE_INPUT,
+                          tile_idx=zero)
+    yr, yi = stockham.fft_tile(xr, xi, split_radix=split_radix)
+    yr, yi = inject.apply(yr, yi, inj_local, stage=inject.STAGE_OUTPUT,
+                          tile_idx=zero)
+
+    e1r, e1i = tw.wang_e1_jnp(n, dtype)
+    sr, si = cplx.cdot(e1r[None, :], e1i[None, :], yr, yi, axis=-1)  # [gb]
+    gyr = yr.reshape(gs, bs, n)
+    gyi = yi.reshape(gs, bs, n)
+    yc2r, yc2i = jnp.sum(gyr, axis=1), jnp.sum(gyi, axis=1)
+
+    rr, ri = sr - dr, si - di
+    y_ref[...] = cplx.merge(yr, yi)
+    psig_ref[...] = jnp.stack(
+        [rr, ri, _cabs(dr, di), jnp.zeros_like(rr)],
+        axis=-1).reshape(gs, bs, PSIG_LEN)[None]
+    c2_ref[...] = cplx.merge(c2r, c2i)[None]
+    yc2_ref[...] = cplx.merge(yc2r, yc2i)[None]
+
+
+def ft_thread_batched(x, inj, *, bs: int, split_radix: int = 8):
+    """Thread-level two-sided ABFT FFT.
+
+    Returns (y [B,N,2], psig [T,bs,4], c2 [T,N,2], yc2 [T,N,2]).
+    """
+    b, n, _ = x.shape
+    if b % bs != 0:
+        raise ValueError(f"batch {b} not divisible by tile bs={bs}")
+    tiles = b // bs
+    gs = groups_per_program(bs, n, b)
+    progs = tiles // gs
+    gb = gs * bs
+    kernel = functools.partial(_ft_thread_body, bs=bs,
+                               split_radix=split_radix)
+    y, psig, c2, yc2 = pl.pallas_call(
+        kernel,
+        grid=(progs,),
+        in_specs=[
+            pl.BlockSpec((gb, n, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((inject.DESC_LEN,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((gb, n, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, gs, bs, PSIG_LEN), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, gs, n, 2), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, gs, n, 2), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n, 2), x.dtype),
+            jax.ShapeDtypeStruct((progs, gs, bs, PSIG_LEN), x.dtype),
+            jax.ShapeDtypeStruct((progs, gs, n, 2), x.dtype),
+            jax.ShapeDtypeStruct((progs, gs, n, 2), x.dtype),
+        ],
+        interpret=True,
+    )(x, inj)
+    return (y, psig.reshape(tiles, bs, PSIG_LEN),
+            c2.reshape(tiles, n, 2), yc2.reshape(tiles, n, 2))
+
+
+def _correction_body(c2_ref, yc2_ref, delta_ref, *, split_radix: int):
+    cr, ci = cplx.split(c2_ref[...])
+    yr, yi = cplx.split(yc2_ref[...])
+    fr, fi = stockham.fft_tile(cr, ci, split_radix=split_radix)
+    delta_ref[...] = cplx.merge(fr - yr, fi - yi)
+
+
+def correction_batched(c2, yc2, *, split_radix: int = 8):
+    """Delayed batched correction kernel: Delta = FFT(c2) - yc2.
+
+    c2, yc2: [K, N, 2] stacked composites of K flagged tiles (padded by the
+    coordinator). The K FFTs run in ONE launch — this is the batching that
+    lets two-sided ABFT amortize corrections (paper §III-B, Fig 3).
+    """
+    k, n, _ = c2.shape
+    kernel = functools.partial(_correction_body, split_radix=split_radix)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((k, n, 2), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, n, 2), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, n, 2), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n, 2), c2.dtype),
+        interpret=True,
+    )(c2, yc2)

@@ -1,0 +1,71 @@
+"""In-kernel fault injection (fault model of TurboFFT §II-A).
+
+A single-event upset is emulated by flipping exactly one bit of one float
+word *inside* the lowered computation: after the input checksums have been
+encoded and before the output checksums are verified — i.e. the corruption
+hits the compute path exactly where the paper's fault model places it
+(compute logic; memory is assumed ECC-protected).
+
+The injection descriptor is a regular operand (int32[8]) so the same AOT
+artifact serves both clean and fault-campaign runs:
+
+    [0] enabled      (0/1)
+    [1] tile index   (which grid program is hit)
+    [2] signal index (within the tile, 0..bs-1)
+    [3] element index(0..N-1)
+    [4] stage        (0 = input side / first butterfly, 1 = output side)
+    [5] bit index    (0..31 for f32, 0..63 for f64)
+    [6] word         (0 = re, 1 = im)
+    [7] reserved
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STAGE_INPUT = 0
+STAGE_OUTPUT = 1
+
+DESC_LEN = 8
+
+
+def _flip_word(arr, bit):
+    """Bitcast-XOR-bitcast one-bit flip of every element of `arr`."""
+    if arr.dtype == jnp.float32:
+        itype = jnp.int32
+    elif arr.dtype == jnp.float64:
+        itype = jnp.int64
+    else:
+        raise ValueError(f"unsupported dtype {arr.dtype}")
+    ia = jax.lax.bitcast_convert_type(arr, itype)
+    mask = jnp.left_shift(jnp.asarray(1, itype), bit.astype(itype))
+    return jax.lax.bitcast_convert_type(ia ^ mask, arr.dtype)
+
+
+def apply(xr, xi, inj, *, stage: int, tile_idx):
+    """Conditionally flip one bit of x[sig, elem] (re or im) in-place.
+
+    xr/xi: [bs, n] split-complex tile. `inj`: int32[8] descriptor values
+    (already loaded from the ref). `tile_idx`: traced grid program id.
+    Branch-free (select) so the no-fault path costs two selects — the
+    analog of the paper's negligible-overhead injection hooks.
+    """
+    bs, n = xr.shape
+    hit = ((inj[0] != 0)
+           & (inj[4] == stage)
+           & (inj[1] == tile_idx.astype(jnp.int32)))
+    rows = jnp.arange(bs, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(n, dtype=jnp.int32)[None, :]
+    sel = (rows == inj[2]) & (cols == inj[3])
+    fr = _flip_word(xr, inj[5])
+    fi = _flip_word(xi, inj[5])
+    xr = jnp.where(sel & hit & (inj[6] == 0), fr, xr)
+    xi = jnp.where(sel & hit & (inj[6] == 1), fi, xi)
+    return xr, xi
+
+
+def none_descriptor():
+    """A descriptor that injects nothing (clean runs)."""
+    import numpy as np
+    return np.zeros((DESC_LEN,), dtype=np.int32)

@@ -1,0 +1,225 @@
+"""Batched self-sorting FFT as a Pallas macro-kernel (TurboFFT baseline).
+
+Layer-1 of the stack. One grid program processes one VMEM-resident tile of
+``bs`` signals of length ``N`` — the Pallas analog of the paper's
+threadblock (§IV-A, Fig 4):
+
+* kernel level: the grid walks tiles of the batch;
+* threadblock level: the whole (bs, N) tile lives in VMEM (shared-memory
+  analog), staged via BlockSpec;
+* thread level: the recursion bottoms out in a dense radix-r DFT matmul
+  (r <= 32) — the "macro kernel" that on a real TPU hits the MXU.
+
+The recursion is the standard Cooley-Tukey splitting N = R * M with
+n = n1 + R * n2,  k = M * k1 + k2:
+
+    y[M*k1 + k2] = sum_{n1} omega_N^{n1*k2} * omega_R^{n1*k1}
+                   * (DFT_M over n2 of x[n1 + R*n2])
+
+which in array form is: reshape (M, R) -> DFT_M along axis -2 -> twiddle
+(R, M) -> dense DFT_R along n1 -> transpose -> flatten. All twiddles are
+trace-time constants (small) — XLA folds the rest at compile time.
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated analytically (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import cplx
+from . import twiddle as tw
+
+# Largest signal length a single kernel tile may hold (VMEM budget analog:
+# bs * N * 2 floats + twiddles must fit the scratchpad, DESIGN.md §7).
+MAX_TILE_N = 4096
+
+
+def fft_tile(xr, xi, *, base_max: int = tw.BASE_RADIX_MAX, split_radix: int = 8):
+    """Forward FFT along the last axis of split-complex arrays.
+
+    Pure trace-time function — usable both inside Pallas kernel bodies and
+    directly at the JAX level (the L2 pipeline uses it for stage FFTs).
+    """
+    n = xr.shape[-1]
+    dtype = xr.dtype
+    if n == 1:
+        return xr, xi
+    if n <= base_max:
+        wr, wi = tw.dft_matrix_jnp(n, dtype)
+        return cplx.cmatmul(xr, xi, wr, wi)
+
+    r = split_radix
+    while n % r != 0 or n // r < 2:
+        r //= 2
+    m = n // r
+
+    # n = n1 + r*n2  ->  row-major reshape (m, r): [n2, n1]
+    ar = xr.reshape(xr.shape[:-1] + (m, r))
+    ai = xi.reshape(xi.shape[:-1] + (m, r))
+    # DFT_M along n2: swap n2 to the last axis
+    br = jnp.swapaxes(ar, -1, -2)  # [..., r(n1), m(n2)]
+    bi = jnp.swapaxes(ai, -1, -2)
+    br, bi = fft_tile(br, bi, base_max=base_max, split_radix=split_radix)
+    # twiddle omega_N^{n1*k2}, shape (r, m)
+    twr, twi = tw.twiddle_jnp(n, r, m, dtype)
+    cr, ci = cplx.cmul(br, bi, twr, twi)
+    # dense DFT_R along n1: swap so n1 is last -> [..., m(k2), r(n1)]
+    cr = jnp.swapaxes(cr, -1, -2)
+    ci = jnp.swapaxes(ci, -1, -2)
+    dr, di = cplx.cmatmul(cr, ci, *tw.dft_matrix_jnp(r, dtype))
+    # y[m*k1 + k2]: view as (r(k1), m(k2)) row-major -> swap axes -> flatten
+    dr = jnp.swapaxes(dr, -1, -2)
+    di = jnp.swapaxes(di, -1, -2)
+    return dr.reshape(xr.shape), di.reshape(xi.shape)
+
+
+def ifft_tile(xr, xi, **kw):
+    """Inverse FFT along the last axis (conjugate trick, includes 1/N)."""
+    n = xr.shape[-1]
+    yr, yi = fft_tile(xr, -xi, **kw)
+    scale = jnp.asarray(1.0 / n, dtype=xr.dtype)
+    return yr * scale, -yi * scale
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _fft_kernel_body(x_ref, o_ref, *, split_radix: int, base_max: int):
+    xr, xi = cplx.split(x_ref[...])
+    yr, yi = fft_tile(xr, xi, base_max=base_max, split_radix=split_radix)
+    o_ref[...] = cplx.merge(yr, yi)
+
+
+def fft_batched(x, *, bs: int, split_radix: int = 8,
+                base_max: int = tw.BASE_RADIX_MAX):
+    """Batched FFT via a Pallas kernel.
+
+    x: [B, N, 2] real (interleaved complex), B divisible by ``bs``.
+    Returns y of the same shape. Grid = B // bs tiles.
+    """
+    b, n, _ = x.shape
+    if b % bs != 0:
+        raise ValueError(f"batch {b} not divisible by tile bs={bs}")
+    if n > MAX_TILE_N:
+        raise ValueError(f"N={n} exceeds single-tile maximum {MAX_TILE_N}")
+    tiles = b // bs
+    kernel = functools.partial(_fft_kernel_body, split_radix=split_radix,
+                               base_max=base_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((bs, n, 2), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bs, n, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, 2), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _vklike_kernel_body(x_ref, o_ref):
+    # "VkFFT-like" variant: thread-level FFT fixed at radix 32 with a
+    # radix-32 recursive split — deliberately compute-heavy per lane,
+    # reproducing VkFFT's unbalanced-workload dip at log N = 13/14 (§V-A1).
+    xr, xi = cplx.split(x_ref[...])
+    yr, yi = fft_tile(xr, xi, base_max=32, split_radix=32)
+    o_ref[...] = cplx.merge(yr, yi)
+
+
+def fft_batched_vklike(x, *, bs: int):
+    """The VkFFT-stand-in baseline kernel (DESIGN.md §1 substitutions)."""
+    b, n, _ = x.shape
+    if b % bs != 0:
+        raise ValueError(f"batch {b} not divisible by tile bs={bs}")
+    tiles = b // bs
+    return pl.pallas_call(
+        _vklike_kernel_body,
+        grid=(tiles,),
+        in_specs=[pl.BlockSpec((bs, n, 2), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bs, n, 2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, 2), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.lru_cache(maxsize=None)
+def _bit_reversal_perm(n: int) -> tuple:
+    """Bit-reversal index permutation for the classic iterative DIT FFT."""
+    bits = int(np.log2(n))
+    rev = np.zeros(n, dtype=np.int64)
+    for i in range(n):
+        r, v = 0, i
+        for _ in range(bits):
+            r = (r << 1) | (v & 1)
+            v >>= 1
+        rev[i] = r
+    return tuple(rev.tolist())
+
+
+def naive_bitrev_launch(x):
+    """TurboFFT-v0 'launch' 0: the bit-reversal reorder pass."""
+    b, n, _ = x.shape
+    perm_np = np.asarray(_bit_reversal_perm(n))
+
+    def body(x_ref, o_ref):
+        # build the permutation arithmetically (no captured constants):
+        # bit reversal of log2(n)-bit indices via shifts and masks.
+        bits = int(np.log2(n))
+        idx = jnp.arange(n, dtype=jnp.int32)
+        rev = jnp.zeros_like(idx)
+        for _ in range(bits):
+            rev = (rev << 1) | (idx & 1)
+            idx = idx >> 1
+        o_ref[...] = jnp.take(x_ref[...], rev, axis=1)
+    del perm_np
+
+    return pl.pallas_call(
+        body, out_shape=jax.ShapeDtypeStruct((b, n, 2), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def naive_radix2_stage(x, stage: int):
+    """One classic radix-2 DIT butterfly stage over the whole batch.
+
+    The unoptimized baseline of the stepwise-optimization study (Fig 8):
+    TurboFFT-v0 runs log2(N) separate kernel launches, one butterfly pass
+    per launch, one radix-2 FFT per thread — the workload-starved regime
+    the paper calls out in §IV-A2.
+    """
+    b, n, _ = x.shape
+    m = 1 << (stage + 1)  # sub-transform length after this stage
+    half = m // 2
+
+    def body(x_ref, o_ref):
+        xr, xi = cplx.split(x_ref[...])
+        a = xr.reshape(b, n // m, m)
+        c = xi.reshape(b, n // m, m)
+        er, ei = a[..., :half], c[..., :half]
+        orr, oi = a[..., half:], c[..., half:]
+        j = jnp.arange(half, dtype=jnp.int32)
+        twr, twi = tw._phase_cos_sin(j, m, xr.dtype)
+        tr, ti = cplx.cmul(orr, oi, twr, twi)
+        yr = jnp.concatenate([er + tr, er - tr], axis=-1)
+        yi = jnp.concatenate([ei + ti, ei - ti], axis=-1)
+        o_ref[...] = cplx.merge(yr.reshape(b, n), yi.reshape(b, n))
+
+    return pl.pallas_call(
+        body, out_shape=jax.ShapeDtypeStruct((b, n, 2), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def fft_naive_multilaunch(x):
+    """TurboFFT-v0: bit-reversal + log2(N) butterfly kernel launches."""
+    n = x.shape[1]
+    x = naive_bitrev_launch(x)
+    for s in range(int(np.log2(n))):
+        x = naive_radix2_stage(x, s)
+    return x

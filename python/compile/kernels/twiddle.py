@@ -1,0 +1,205 @@
+"""Twiddle factors, DFT base matrices, and ABFT encoding vectors.
+
+Paper mapping (TurboFFT §IV-A3 "Twiddling Factor Optimization"):
+
+* thread-level radix-r DFT matrices (r <= 32) are baked as trace-time
+  numpy constants — the analog of encoding twiddles "as constant into the
+  thread-level macro FFT kernel";
+* warp/threadblock-level twiddles are either baked constants (small N,
+  inside a Pallas kernel tile) or generated at runtime from iota + trig —
+  with static shapes XLA constant-folds them at compile time, which is the
+  TPU analog of the paper's "prepare twiddles outside the kernel" without
+  bloating the HLO-text interchange files;
+* the ABFT encoding vector e1 is Wang's vector (omega_3^k) and the
+  left-side row checksum a = e1^T W has the closed geometric-series form
+  implemented in :func:`ew_row_np` — O(N) instead of the O(N^2) GEMV the
+  paper says existing schemes pay.
+
+All `_np` functions are trace-time (numpy, float64/complex128) and are the
+single source of truth shared by kernels, the L2 model, and the pytest
+oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# Largest dense (matmul) DFT used as the thread-level macro kernel.
+# Mirrors the paper's 8/16/32 elements-per-thread workload assignment.
+BASE_RADIX_MAX = 32
+
+
+def dft_matrix_np(r: int) -> np.ndarray:
+    """Dense forward DFT matrix W[n, k] = exp(-2*pi*i*n*k/r), complex128."""
+    idx = np.arange(r)
+    return np.exp(-2j * np.pi * np.outer(idx, idx) / r)
+
+
+def twiddle_np(n_total: int, n1: int, n2: int) -> np.ndarray:
+    """Cooley-Tukey inter-stage twiddle T[a, b] = exp(-2*pi*i*a*b/n_total).
+
+    Shape (n1, n2). Used between the DFT over the n2-axis and the DFT over
+    the n1-axis in the splitting N = n1 * n2 (n = n1_idx + n1 * n2_idx).
+    """
+    a = np.arange(n1)
+    b = np.arange(n2)
+    return np.exp(-2j * np.pi * np.outer(a, b) / n_total)
+
+
+def wang_e1_np(n: int) -> np.ndarray:
+    """Wang's ABFT encoding vector e1[k] = omega_3^k = exp(-2*pi*i*k/3).
+
+    Chosen over the all-ones vector because it cannot miss the
+    (x + eps, x - eps) cancellation case, and over Jou's vector because it
+    leaves the input signal unchanged (TurboFFT §II-C).
+    """
+    k = np.arange(n)
+    return np.exp(-2j * np.pi * (k % 3) / 3)
+
+
+def ew_row_np(n: int) -> np.ndarray:
+    """Left-side checksum row a = e1^T W in closed form, O(N).
+
+    a[m] = sum_k omega_3^k * omega_N^{k m}
+         = sum_k rho^k,     rho = exp(-2*pi*i*(m/N + 1/3))
+         = (1 - rho^N) / (1 - rho)
+
+    For power-of-two N, m/N + 1/3 is never an integer, so rho != 1 and the
+    geometric closed form is always valid; every |a[m]| > 0, which is what
+    gives full single-error coverage along the signal axis.
+    """
+    m = np.arange(n)
+    theta = m / n + 1.0 / 3.0
+    rho = np.exp(-2j * np.pi * theta)
+    rho_n = np.exp(-2j * np.pi * (n * (1.0 / 3.0)))  # rho^N, |.|=1
+    return (1.0 - rho_n) / (1.0 - rho)
+
+
+def e3_weights_np(bs: int) -> np.ndarray:
+    """Right-side locator weights e3 = (1, 2, ..., bs) across the batch."""
+    return np.arange(1, bs + 1, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel (traced) twiddle generators.
+#
+# Pallas kernels may not close over array constants, so twiddles are built
+# from iota + trig *inside* the kernel body. The phase index i*j is reduced
+# mod n in exact int32 arithmetic before the float conversion, so the trig
+# argument stays in [0, 2*pi) and FP32 twiddles keep full precision even for
+# n = 2^18. XLA constant-folds all of this at compile time (static shapes),
+# which is the TPU analog of the paper's precomputed twiddle tables.
+# ---------------------------------------------------------------------------
+
+def _phase_cos_sin(num, n: int, dtype):
+    """exp(-2*pi*i*num/n) for an int32 array `num` already reduced mod n."""
+    theta = num.astype(dtype) * jnp.asarray(2.0 * np.pi / n, dtype=dtype)
+    return jnp.cos(theta), -jnp.sin(theta)
+
+
+def dft_matrix_jnp(r: int, dtype):
+    """Traced dense DFT matrix as (re, im), shape (r, r)."""
+    i = jnp.arange(r, dtype=jnp.int32)
+    num = (i[:, None] * i[None, :]) % r
+    return _phase_cos_sin(num, r, dtype)
+
+
+def twiddle_jnp(n_total: int, n1: int, n2: int, dtype):
+    """Traced Cooley-Tukey twiddle (re, im), shape (n1, n2)."""
+    a = jnp.arange(n1, dtype=jnp.int32)
+    b = jnp.arange(n2, dtype=jnp.int32)
+    num = (a[:, None] * b[None, :]) % n_total
+    return _phase_cos_sin(num, n_total, dtype)
+
+
+def wang_e1_jnp(n: int, dtype):
+    """Traced Wang encoding vector e1 (re, im), shape (n,)."""
+    k = jnp.arange(n, dtype=jnp.int32) % 3
+    return _phase_cos_sin(k, 3, dtype)
+
+
+def ew_row_jnp(n: int, dtype):
+    """Traced left-checksum row a = e1^T W (re, im) via the closed form.
+
+    a[m] = (1 - rho^n) / (1 - rho), rho = exp(-2*pi*i*(m/n + 1/3)).
+    The scalar rho^n = exp(-2*pi*i*n/3) is folded in as python literals.
+    """
+    m = jnp.arange(n, dtype=jnp.int32)
+    # rho = exp(-2*pi*i*m/n) * exp(-2*pi*i/3); keep the m/n part reduced.
+    cr, ci = _phase_cos_sin(m, n, dtype)
+    w3 = np.exp(-2j * np.pi / 3.0)
+
+    def c(v):  # python-float scalars stay weakly typed (no f64 promotion)
+        return jnp.asarray(float(v), dtype=dtype)
+
+    rho_r = cr * c(w3.real) - ci * c(w3.imag)
+    rho_i = cr * c(w3.imag) + ci * c(w3.real)
+    rho_nn = np.exp(-2j * np.pi * (n / 3.0))  # rho^n (same for every m)
+    num_r = c(1.0 - rho_nn.real) + jnp.zeros_like(rho_r)
+    num_i = c(-rho_nn.imag) + jnp.zeros_like(rho_i)
+    den_r = 1.0 - rho_r
+    den_i = -rho_i
+    d = den_r * den_r + den_i * den_i
+    return ((num_r * den_r + num_i * den_i) / d,
+            (num_i * den_r - num_r * den_i) / d)
+
+
+def radix_plan(n: int, base_max: int = BASE_RADIX_MAX) -> list[int]:
+    """Factor a power-of-two FFT size into per-stage radices.
+
+    The last entry is the dense "thread-level" base DFT (<= base_max);
+    earlier entries are the recursive split radices, greedily 8 (the
+    paper's default thread workload), then 4/2 remainders.
+    """
+    if n & (n - 1) != 0 or n < 2:
+        raise ValueError(f"FFT size must be a power of two >= 2, got {n}")
+    plan: list[int] = []
+    m = n
+    while m > base_max:
+        for r in (8, 4, 2):
+            if m % r == 0 and m // r >= 2:
+                plan.append(r)
+                m //= r
+                break
+    plan.append(m)
+    return plan
+
+
+#: regime thresholds: 1 kernel launch <= 2^12, 2 launches <= 2^16,
+#: 3 launches above — the scaled analog of the paper's 2^13 / 2^22 / 2^29
+#: boundaries (§IV-B3, DESIGN.md §1).
+STAGE2_MAX = 1 << 16
+
+
+def kernel_factors(n: int, max_tile: int, stages: int | None = None) -> list[int]:
+    """Split N into 1-3 balanced power-of-two factors, each <= max_tile.
+
+    The analog of the paper's 1/2/3 kernel-launch regimes (N1*N2*N3 cube,
+    §IV-A1 / Table I). ``stages`` forces a launch count (used by ablation
+    benches); by default it follows the regime thresholds.
+    """
+    if n & (n - 1) != 0 or n < 2:
+        raise ValueError(f"FFT size must be a power of two >= 2, got {n}")
+    if stages is None:
+        if n <= max_tile:
+            stages = 1
+        elif n <= STAGE2_MAX:
+            stages = 2
+        else:
+            stages = 3
+    bits = n.bit_length() - 1
+    if stages == 1:
+        if n > max_tile:
+            raise ValueError(f"N={n} does not fit one tile <= {max_tile}")
+        return [n]
+    # balanced split of the exponent across `stages` factors
+    base, extra = divmod(bits, stages)
+    factors = [1 << (base + (1 if i < extra else 0)) for i in range(stages)]
+    if max(factors) > max_tile:
+        raise ValueError(
+            f"N={n} cannot be balanced into {stages} tiles <= {max_tile}")
+    if min(factors) < 2:
+        raise ValueError(f"N={n} too small for {stages} stages")
+    return factors

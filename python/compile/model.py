@@ -1,0 +1,299 @@
+"""Layer-2: the TurboFFT compute pipelines, composed from the L1 kernels.
+
+Each public ``build_*`` function returns ``(fn, input_specs)`` where ``fn``
+is a pure JAX function (calling the Pallas kernels) and ``input_specs`` are
+``ShapeDtypeStruct`` examples for AOT lowering. `aot.py` lowers every
+configured variant once to HLO text; the rust coordinator executes the
+artifacts and never calls back into Python.
+
+Size regimes (paper §IV-A1 and Fig 4, scaled per DESIGN.md §1):
+
+* ``stages == 1`` (N <= 4096): one Pallas macro-kernel — checksums fused
+  inside the kernel (paper's threadblock/thread-level schemes);
+* ``stages in (2, 3)``: the four-step decomposition N = N1 * N2 (* N3);
+  each stage is a batched Pallas kernel over one axis with inter-stage
+  twiddles and transposes at the JAX level (XLA fuses them into the
+  surrounding stages). For staged sizes the ABFT tile is the whole call:
+  encode/verify wrap the pipeline end-to-end, which the linearity of the
+  FFT makes exactly as sound as the per-kernel fusion (DESIGN.md §3).
+
+Boundary convention: complex data travels as real arrays [..., 2]
+(interleaved re/im) because the rust ``Literal`` API has no complex
+helpers; complex values exist only inside the HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .codegen import CORRECTION_K, KernelConfig, tile_bs
+from .kernels import cplx, fused_ft, inject, onesided, stockham
+from .kernels import twiddle as tw
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _stage_bs(stage_n: int, flat_batch: int) -> int:
+    """Signals per stage-kernel program: target ~64k elements per program
+    (throughput; no checksum semantics at stage level)."""
+    target = max(1, (1 << 16) // stage_n)
+    bs = 1
+    while bs * 2 <= target and flat_batch % (bs * 2) == 0:
+        bs *= 2
+    return max(1, min(bs, flat_batch))
+
+
+def _stage_fft(xr, xi, stage_n: int, *, split_radix: int, base_max: int,
+               vklike: bool = False):
+    """Run one Pallas stage kernel along the last axis (any leading dims)."""
+    lead = xr.shape[:-1]
+    flat = 1
+    for d in lead:
+        flat *= d
+    merged = cplx.merge(xr.reshape(flat, stage_n), xi.reshape(flat, stage_n))
+    bs = _stage_bs(stage_n, flat)
+    if vklike:
+        out = stockham.fft_batched_vklike(merged, bs=bs)
+    else:
+        out = stockham.fft_batched(merged, bs=bs, split_radix=split_radix,
+                                   base_max=base_max)
+    yr, yi = cplx.split(out)
+    return yr.reshape(lead + (stage_n,)), yi.reshape(lead + (stage_n,))
+
+
+def staged_fft(xr, xi, factors, *, split_radix: int = 8,
+               base_max: int = tw.BASE_RADIX_MAX, vklike: bool = False):
+    """Four-step FFT over the last axis with one Pallas kernel per stage.
+
+    Recursion over the kernel-level cube N = N1 * (N2 * N3 ...), splitting
+    n = n1 + N1*n2: DFT over the tail factors, inter-stage twiddle, dense
+    stage FFT over N1, transpose-and-flatten (paper Fig 4 dataflow).
+    """
+    n = xr.shape[-1]
+    kw = dict(split_radix=split_radix, base_max=base_max, vklike=vklike)
+    if len(factors) == 1:
+        return _stage_fft(xr, xi, n, **kw)
+    n1 = factors[0]
+    m = n // n1
+    lead = xr.shape[:-1]
+    ar = xr.reshape(lead + (m, n1))
+    ai = xi.reshape(lead + (m, n1))
+    br = jnp.swapaxes(ar, -1, -2)   # [..., n1, m]
+    bi = jnp.swapaxes(ai, -1, -2)
+    br, bi = staged_fft(br, bi, factors[1:], **kw)
+    twr, twi = tw.twiddle_jnp(n, n1, m, xr.dtype)
+    cr, ci = cplx.cmul(br, bi, twr, twi)
+    cr = jnp.swapaxes(cr, -1, -2)   # [..., m(k2), n1]
+    ci = jnp.swapaxes(ci, -1, -2)
+    dr, di = _stage_fft(cr, ci, n1, **kw)
+    dr = jnp.swapaxes(dr, -1, -2)   # [..., n1(k1), m(k2)]
+    di = jnp.swapaxes(di, -1, -2)
+    return dr.reshape(lead + (n,)), di.reshape(lead + (n,))
+
+
+def _cabs(re, im):
+    return jnp.sqrt(re * re + im * im)
+
+
+# ---------------------------------------------------------------------------
+# Model builders (one per scheme)
+# ---------------------------------------------------------------------------
+
+def build_noft(cfg: KernelConfig):
+    """Baseline TurboFFT without fault tolerance. f(x) -> (y,)"""
+    dt = cfg.dtype
+
+    def fn(x):
+        if cfg.stages == 1:
+            # no checksum semantics here: size programs for throughput
+            pbs = _stage_bs(cfg.n, cfg.batch)
+            if cfg.scheme == "vklike":
+                return (stockham.fft_batched_vklike(x, bs=pbs),)
+            return (stockham.fft_batched(
+                x, bs=pbs, split_radix=cfg.split_radix,
+                base_max=cfg.base_max),)
+        xr, xi = cplx.split(x)
+        yr, yi = staged_fft(xr, xi, cfg.factors, split_radix=cfg.split_radix,
+                            base_max=cfg.base_max,
+                            vklike=(cfg.scheme == "vklike"))
+        return (cplx.merge(yr, yi),)
+
+    return fn, [_spec((cfg.batch, cfg.n, 2), dt)]
+
+
+def build_ft_block(cfg: KernelConfig):
+    """Threadblock-level two-sided ABFT. f(x, inj) -> (y, meta, c2, yc2)."""
+    dt = cfg.dtype
+
+    def fn(x, inj):
+        if cfg.stages == 1:
+            return fused_ft.ft_block_batched(x, inj, bs=cfg.bs,
+                                             split_radix=cfg.split_radix)
+        # staged: the whole call is one ABFT tile (bs == batch)
+        xr, xi = cplx.split(x)
+        b, n = xr.shape
+        w3 = jnp.arange(1, b + 1, dtype=dt)[:, None]
+        c2r, c2i = jnp.sum(xr, axis=0), jnp.sum(xi, axis=0)
+        c3r, c3i = jnp.sum(w3 * xr, axis=0), jnp.sum(w3 * xi, axis=0)
+        ar, ai = tw.ew_row_jnp(n, dt)
+        a2r, a2i = cplx.cdot(ar, ai, c2r, c2i)
+        a3r, a3i = cplx.cdot(ar, ai, c3r, c3i)
+        zero = jnp.asarray(0, jnp.int32)
+        xr, xi = inject.apply(xr, xi, inj, stage=inject.STAGE_INPUT,
+                              tile_idx=zero)
+        yr, yi = staged_fft(xr, xi, cfg.factors,
+                            split_radix=cfg.split_radix,
+                            base_max=cfg.base_max)
+        yr, yi = inject.apply(yr, yi, inj, stage=inject.STAGE_OUTPUT,
+                              tile_idx=zero)
+        yc2r, yc2i = jnp.sum(yr, axis=0), jnp.sum(yi, axis=0)
+        yc3r, yc3i = jnp.sum(w3 * yr, axis=0), jnp.sum(w3 * yi, axis=0)
+        e1r, e1i = tw.wang_e1_jnp(n, dt)
+        s2r, s2i = cplx.cdot(e1r, e1i, yc2r, yc2i)
+        s3r, s3i = cplx.cdot(e1r, e1i, yc3r, yc3i)
+        meta = jnp.stack([s2r - a2r, s2i - a2i, _cabs(a2r, a2i),
+                          s3r - a3r, s3i - a3i, _cabs(a3r, a3i),
+                          jnp.zeros_like(a2r), jnp.zeros_like(a2r)])[None]
+        return (cplx.merge(yr, yi), meta,
+                cplx.merge(c2r, c2i)[None], cplx.merge(yc2r, yc2i)[None])
+
+    return fn, [_spec((cfg.batch, cfg.n, 2), dt),
+                _spec((inject.DESC_LEN,), jnp.int32)]
+
+
+def build_ft_thread(cfg: KernelConfig):
+    """Thread-level two-sided ABFT. f(x, inj) -> (y, psig, c2, yc2)."""
+    dt = cfg.dtype
+
+    def fn(x, inj):
+        if cfg.stages == 1:
+            return fused_ft.ft_thread_batched(x, inj, bs=cfg.bs,
+                                              split_radix=cfg.split_radix)
+        xr, xi = cplx.split(x)
+        b, n = xr.shape
+        ar, ai = tw.ew_row_jnp(n, dt)
+        dr, di = cplx.cdot(ar[None, :], ai[None, :], xr, xi, axis=-1)
+        c2r, c2i = jnp.sum(xr, axis=0), jnp.sum(xi, axis=0)
+        zero = jnp.asarray(0, jnp.int32)
+        xr, xi = inject.apply(xr, xi, inj, stage=inject.STAGE_INPUT,
+                              tile_idx=zero)
+        yr, yi = staged_fft(xr, xi, cfg.factors,
+                            split_radix=cfg.split_radix,
+                            base_max=cfg.base_max)
+        yr, yi = inject.apply(yr, yi, inj, stage=inject.STAGE_OUTPUT,
+                              tile_idx=zero)
+        e1r, e1i = tw.wang_e1_jnp(n, dt)
+        sr, si = cplx.cdot(e1r[None, :], e1i[None, :], yr, yi, axis=-1)
+        yc2r, yc2i = jnp.sum(yr, axis=0), jnp.sum(yi, axis=0)
+        psig = jnp.stack([sr - dr, si - di, _cabs(dr, di),
+                          jnp.zeros_like(sr)], axis=-1)[None]
+        return (cplx.merge(yr, yi), psig,
+                cplx.merge(c2r, c2i)[None], cplx.merge(yc2r, yc2i)[None])
+
+    return fn, [_spec((cfg.batch, cfg.n, 2), dt),
+                _spec((inject.DESC_LEN,), jnp.int32)]
+
+
+def build_onesided(cfg: KernelConfig):
+    """One-sided ABFT baseline (Xin-style). f(x, inj) -> (y, psig)."""
+    dt = cfg.dtype
+
+    def fn(x, inj):
+        if cfg.stages == 1:
+            ewr, ewi = tw.ew_row_jnp(cfg.n, dt)
+            ew = cplx.merge(ewr, ewi)
+            return onesided.onesided_batched(x, ew, inj, bs=cfg.bs,
+                                             split_radix=cfg.split_radix)
+        xr, xi = cplx.split(x)
+        n = xr.shape[-1]
+        ar, ai = tw.ew_row_jnp(n, dt)
+        dr, di = cplx.cdot(ar[None, :], ai[None, :], xr, xi, axis=-1)
+        zero = jnp.asarray(0, jnp.int32)
+        xr, xi = inject.apply(xr, xi, inj, stage=inject.STAGE_INPUT,
+                              tile_idx=zero)
+        yr, yi = staged_fft(xr, xi, cfg.factors,
+                            split_radix=cfg.split_radix,
+                            base_max=cfg.base_max)
+        yr, yi = inject.apply(yr, yi, inj, stage=inject.STAGE_OUTPUT,
+                              tile_idx=zero)
+        e1r, e1i = tw.wang_e1_jnp(n, dt)
+        sr, si = cplx.cdot(e1r[None, :], e1i[None, :], yr, yi, axis=-1)
+        psig = jnp.stack([sr - dr, si - di, _cabs(dr, di),
+                          jnp.zeros_like(sr)], axis=-1)[None]
+        return (cplx.merge(yr, yi), psig)
+
+    return fn, [_spec((cfg.batch, cfg.n, 2), dt),
+                _spec((inject.DESC_LEN,), jnp.int32)]
+
+
+def build_correction(cfg: KernelConfig, k: int = CORRECTION_K):
+    """Delayed batched correction. f(c2[K,N,2], yc2[K,N,2]) -> (delta,)."""
+    dt = cfg.dtype
+
+    def fn(c2, yc2):
+        if cfg.stages == 1:
+            return (fused_ft.correction_batched(
+                c2, yc2, split_radix=cfg.split_radix),)
+        cr, ci = cplx.split(c2)
+        fr, fi = staged_fft(cr, ci, cfg.factors,
+                            split_radix=cfg.split_radix,
+                            base_max=cfg.base_max)
+        yr, yi = cplx.split(yc2)
+        return (cplx.merge(fr - yr, fi - yi),)
+
+    return fn, [_spec((k, cfg.n, 2), dt), _spec((k, cfg.n, 2), dt)]
+
+
+def build_checksum(cfg: KernelConfig):
+    """Offline per-signal checksum pass. f(x) -> (cs [T, bs, 2],)."""
+    dt = cfg.dtype
+
+    def fn(x):
+        ewr, ewi = tw.ew_row_jnp(cfg.n, dt)
+        ew = cplx.merge(ewr, ewi)
+        bs = min(cfg.bs, cfg.batch)
+        return (onesided.checksum_batched(x, ew, bs=bs),)
+
+    return fn, [_spec((cfg.batch, cfg.n, 2), dt)]
+
+
+def build_xlafft(cfg: KernelConfig):
+    """cuFFT stand-in: XLA's own FFT op via jnp.fft. f(x) -> (y,)."""
+    dt = cfg.dtype
+
+    def fn(x):
+        c = x[..., 0] + 1j * x[..., 1]
+        y = jnp.fft.fft(c, axis=-1)
+        return (jnp.stack([y.real, y.imag], axis=-1).astype(dt),)
+
+    return fn, [_spec((cfg.batch, cfg.n, 2), dt)]
+
+
+def build_naive_v0(cfg: KernelConfig):
+    """TurboFFT-v0 stepwise baseline (Fig 8): log2(N)+1 kernel launches."""
+    dt = cfg.dtype
+
+    def fn(x):
+        return (stockham.fft_naive_multilaunch(x),)
+
+    return fn, [_spec((cfg.batch, cfg.n, 2), dt)]
+
+
+BUILDERS = {
+    "noft": build_noft,
+    "vklike": build_noft,
+    "ft_block": build_ft_block,
+    "ft_thread": build_ft_thread,
+    "onesided": build_onesided,
+}
+
+#: auxiliary ops emitted alongside the per-scheme FFT artifacts
+AUX_BUILDERS = {
+    "correct": build_correction,
+    "checksum": build_checksum,
+    "xlafft": build_xlafft,
+    "naive_v0": build_naive_v0,
+}

@@ -1,0 +1,32 @@
+"""Shared pytest fixtures/helpers for the TurboFFT compile-path tests."""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def random_signal(rng, batch: int, n: int):
+    """Complex gaussian test signals (the paper's §V-C setup)."""
+    return rng.standard_normal((batch, n)) + 1j * rng.standard_normal((batch, n))
+
+
+def rel_err(got, want):
+    denom = np.max(np.abs(want))
+    return float(np.max(np.abs(got - want)) / (denom if denom else 1.0))
+
+
+def tol_for(dtype, n: int) -> float:
+    """Error budget: kernel error grows ~ eps*sqrt(log2 N); the dense O(N^2)
+    oracle itself accumulates ~ eps*N/4, which dominates at large N."""
+    eps = 1.2e-7 if np.dtype(dtype) == np.float32 else 2.2e-16
+    return eps * (200.0 * max(1.0, np.sqrt(np.log2(max(n, 2)))) + n)

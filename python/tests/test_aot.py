@@ -1,0 +1,65 @@
+"""AOT emission tests: manifest contract + HLO text sanity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_dev_profile_emits_manifest(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--profile", "dev",
+                   "--only", r"n64|correct_n256"])
+    assert rc == 0
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    assert manifest["correction_k"] >= 1
+    entries = manifest["entries"]
+    assert entries, "no artifacts emitted"
+    for e in entries:
+        path = tmp_path / e["file"]
+        assert path.exists()
+        text = path.read_text()
+        assert text.startswith("HloModule"), e["name"]
+        assert e["op"] in ("fft", "correct", "checksum")
+        assert e["inputs"] and e["outputs"]
+        # FT schemes carry the injection descriptor operand
+        if e["scheme"] in ("onesided", "ft_thread", "ft_block"):
+            assert len(e["inputs"]) == 2
+            assert e["inputs"][1]["dtype"] == "int32"
+        # y output always matches the input signal array shape
+        if e["op"] == "fft":
+            assert e["outputs"][0]["shape"] == e["inputs"][0]["shape"]
+
+
+def test_manifest_names_unique(tmp_path):
+    aot.main(["--out", str(tmp_path), "--profile", "dev", "--only", "n64"])
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    names = [e["name"] for e in manifest["entries"]]
+    assert len(names) == len(set(names))
+
+
+def test_ft_block_outputs_documented(tmp_path):
+    aot.main(["--out", str(tmp_path), "--profile", "dev",
+              "--only", "ft_block_n64"])
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    (e,) = manifest["entries"]
+    # (y, meta, c2, yc2)
+    assert len(e["outputs"]) == 4
+    assert e["outputs"][1]["shape"] == [e["tiles"], 8]
+    assert e["outputs"][2]["shape"] == [e["tiles"], e["n"], 2]
+
+
+def test_full_profile_variant_table_is_well_formed():
+    """Don't lower the full profile (slow); validate the generator."""
+    names = set()
+    for name, fn, specs, meta in aot.build_variants("full"):
+        assert name not in names
+        names.add(name)
+        assert meta["op"] in ("fft", "correct", "checksum")
+        assert meta["n"] >= 2
+    # every scheme x size x precision is present
+    assert sum(1 for n in names if n.startswith("fft_ft_block")) >= 14
+    assert any("naive_v0" in n for n in names)
+    assert any(n.startswith("serve_") for n in names)

@@ -1,0 +1,197 @@
+"""Fault-tolerance kernel tests: detect / locate / correct under injection.
+
+Covers the two-sided schemes (thread + threadblock), the one-sided
+baseline, the offline checksum pass, and the correction kernel — including
+the non-finite (Inf/NaN) corruption case where additive correction is
+impossible and the coordinator must fall back to re-execution.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import fused_ft, inject, onesided, ref
+from compile.kernels import twiddle as tw
+from conftest import random_signal
+
+N, BS, TILES = 256, 8, 4
+B = BS * TILES
+
+
+def residuals_block(meta):
+    return np.abs(meta[:, 0] + 1j * meta[:, 1]) / (meta[:, 2] + 1e-30)
+
+
+def locate_block(meta, t):
+    q = (meta[t, 3] + 1j * meta[t, 4]) / (meta[t, 0] + 1j * meta[t, 1])
+    return int(round(float(q.real))) - 1
+
+
+def residuals_psig(psig):
+    return np.abs(psig[..., 0] + 1j * psig[..., 1]) / (psig[..., 2] + 1e-30)
+
+
+@pytest.fixture
+def tile_data(rng):
+    x = random_signal(rng, B, N)
+    return x, ref.pack(x, np.float32), ref.dft_ref(x)
+
+
+def run_block(xp, desc):
+    return [np.asarray(a) for a in fused_ft.ft_block_batched(xp, desc, bs=BS)]
+
+
+def test_clean_run_residuals_below_noise(tile_data):
+    _, xp, want = tile_data
+    y, meta, c2, yc2 = run_block(xp, inject.none_descriptor())
+    assert np.allclose(ref.unpack(y), want,
+                       atol=1e-4 * np.max(np.abs(want)))
+    assert np.all(residuals_block(meta) < 1e-4)
+
+
+@pytest.mark.parametrize("stage", [inject.STAGE_INPUT, inject.STAGE_OUTPUT])
+@pytest.mark.parametrize("tile,sig,elem", [(0, 0, 0), (2, 3, 17), (3, 7, 255)])
+def test_block_detect_locate_correct(tile_data, stage, tile, sig, elem):
+    x, xp, want = tile_data
+    desc = np.array([1, tile, sig, elem, stage, 31, 0, 0], dtype=np.int32)
+    y, meta, c2, yc2 = run_block(xp, desc)
+    r = residuals_block(meta)
+    assert np.argmax(r) == tile and r[tile] > 1e-3
+    loc = locate_block(meta, tile)
+    assert loc == sig
+    # delayed batched correction
+    delta = np.asarray(fused_ft.correction_batched(
+        c2[tile:tile + 1], yc2[tile:tile + 1]))
+    got = ref.unpack(y[tile * BS + loc]) + ref.unpack(delta[0])
+    want_sig = want[tile * BS + loc]
+    assert np.max(np.abs(got - want_sig)) < 1e-3 * np.max(np.abs(want_sig))
+
+
+def test_untouched_signals_unaffected(tile_data):
+    """The fault stays confined to one signal — the error-propagation fix
+    the paper's Fig 1/2 motivates (no cross-signal contamination)."""
+    x, xp, want = tile_data
+    desc = np.array([1, 1, 2, 9, 0, 31, 0, 0], dtype=np.int32)
+    y, meta, c2, yc2 = run_block(xp, desc)
+    yc = ref.unpack(y)
+    mask = np.ones(B, dtype=bool)
+    mask[1 * BS + 2] = False
+    assert np.allclose(yc[mask], want[mask], atol=1e-4 * np.max(np.abs(want)))
+
+
+def test_nonfinite_fault_detected_not_correctable(tile_data):
+    """Bit 30 on a float with magnitude in [1, 2) makes Inf: residual must
+    become non-finite (=> detected at L3), and additive correction cannot
+    restore it — the coordinator's recompute fallback covers this."""
+    x, xp, _ = tile_data
+    # find an element of tile 0 / signal 1 whose re-part is in [1, 2)
+    row = np.abs(x[1].real)
+    cand = np.where((row >= 1.0) & (row < 2.0))[0]
+    assert cand.size, "fixture data has no unit-magnitude element"
+    elem = int(cand[0])
+    desc = np.array([1, 0, 1, elem, 0, 30, 0, 0], dtype=np.int32)
+    y, meta, c2, yc2 = run_block(xp, desc)
+    r = residuals_block(meta)
+    assert not np.isfinite(r[0])
+    # the corrupted signal's outputs are non-finite: recompute is required
+    assert not np.all(np.isfinite(y[1]))
+
+
+def test_mantissa_flip_below_threshold_is_benign(tile_data):
+    """Low mantissa bits perturb the result below any sane delta — the
+    false-alarm/detection tradeoff of the ROC study (Fig 15)."""
+    x, xp, want = tile_data
+    desc = np.array([1, 0, 0, 0, 0, 3, 0, 0], dtype=np.int32)  # bit 3
+    y, meta, _, _ = run_block(xp, desc)
+    r = residuals_block(meta)
+    assert r[0] < 1e-4  # indistinguishable from roundoff
+    assert np.allclose(ref.unpack(y), want, atol=1e-3 * np.max(np.abs(want)))
+
+
+def test_thread_level_detect_locate(tile_data):
+    x, xp, want = tile_data
+    desc = np.array([1, 2, 5, 100, 0, 31, 1, 0], dtype=np.int32)
+    y, psig, c2, yc2 = [np.asarray(a)
+                        for a in fused_ft.ft_thread_batched(xp, desc, bs=BS)]
+    r = residuals_psig(psig)
+    assert np.unravel_index(np.argmax(r), r.shape) == (2, 5)
+    # correction from composites works identically
+    delta = np.asarray(fused_ft.correction_batched(c2[2:3], yc2[2:3]))
+    got = ref.unpack(y[2 * BS + 5]) + ref.unpack(delta[0])
+    want_sig = want[2 * BS + 5]
+    assert np.max(np.abs(got - want_sig)) < 1e-3 * np.max(np.abs(want_sig))
+
+
+def test_onesided_detects_but_needs_recompute(tile_data):
+    x, xp, want = tile_data
+    ew = ref.pack(tw.ew_row_np(N), np.float32)
+    desc = np.array([1, 1, 4, 50, 0, 31, 0, 0], dtype=np.int32)
+    y, psig = [np.asarray(a)
+               for a in onesided.onesided_batched(xp, ew, desc, bs=BS)]
+    r = residuals_psig(psig)
+    assert np.unravel_index(np.argmax(r), r.shape) == (1, 4)
+    # re-execution with no injection is the only fix
+    y2, psig2 = [np.asarray(a) for a in onesided.onesided_batched(
+        xp, ew, inject.none_descriptor(), bs=BS)]
+    assert np.allclose(ref.unpack(y2), want, atol=1e-4 * np.max(np.abs(want)))
+    assert np.all(residuals_psig(psig2) < 1e-4)
+
+
+def test_offline_checksum_matches_ref(tile_data):
+    x, xp, _ = tile_data
+    ew = ref.pack(tw.ew_row_np(N), np.float32)
+    cs = np.asarray(onesided.checksum_batched(xp, ew, bs=BS))
+    want = x.reshape(TILES, BS, N) @ tw.ew_row_np(N)
+    np.testing.assert_allclose(cs[..., 0] + 1j * cs[..., 1], want,
+                               atol=1e-2)
+
+
+def test_correction_kernel_matches_ref(rng):
+    k, n = 4, 256
+    c2 = random_signal(rng, k, n)
+    yc2 = random_signal(rng, k, n)
+    delta = np.asarray(fused_ft.correction_batched(
+        ref.pack(c2, np.float32), ref.pack(yc2, np.float32)))
+    want = ref.dft_ref(c2) - yc2
+    np.testing.assert_allclose(ref.unpack(delta), want,
+                               atol=1e-3 * np.max(np.abs(want)))
+
+
+def test_checksum_math_reference_properties(rng):
+    """Cross-check the detect/locate/correct algebra in exact numpy."""
+    x = random_signal(rng, BS, N)
+    y = ref.dft_ref(x)
+    d = ref.detect_locate(x, y)
+    assert abs(d["r2"]) / d["scale"] < 1e-10  # clean
+    # corrupt signal 3 mid-transform equivalent: corrupt y directly
+    yc = y.copy()
+    yc[3, 100] += 7.5 - 2.5j
+    d = ref.detect_locate(x, yc)
+    assert abs(d["r2"]) / d["scale"] > 1e-6
+    assert d["loc"] == 3
+    fixed = ref.correct(yc, d["c2"], d["yc2"], d["loc"])
+    np.testing.assert_allclose(fixed, y, atol=1e-8)
+
+
+def test_injection_campaign_sweep(rng):
+    """Seeded mini-campaign across random descriptors: every exponent/sign
+    flip at a random site is detected AND located by the block scheme."""
+    x = random_signal(rng, B, N)
+    xp = ref.pack(x, np.float32)
+    for trial in range(10):
+        tile = int(rng.integers(TILES))
+        sig = int(rng.integers(BS))
+        elem = int(rng.integers(N))
+        bit = int(rng.choice([26, 27, 28, 31]))
+        word = int(rng.integers(2))
+        stage = int(rng.integers(2))
+        desc = np.array([1, tile, sig, elem, stage, bit, word, 0],
+                        dtype=np.int32)
+        y, meta, c2, yc2 = run_block(xp, desc)
+        r = residuals_block(meta)
+        finite = np.isfinite(r)
+        if not np.all(finite):
+            assert not finite[tile], (trial, desc)
+            continue
+        assert np.argmax(r) == tile, (trial, desc, r)
+        if r[tile] > 1e-3:
+            assert locate_block(meta, tile) == sig, (trial, desc)

@@ -1,0 +1,121 @@
+"""Kernel vs reference: the CORE correctness signal for Layer 1.
+
+Sweeps shapes/dtypes/radix plans (hypothesis-style: seeded random cases
+over the full parameter grid) and asserts allclose against the pure-numpy
+oracle in ``ref.py``.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref, stockham
+from conftest import random_signal, rel_err, tol_for
+
+SIZES = [2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096]
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_fft_batched_matches_dft(rng, n, dtype):
+    b = 8
+    x = random_signal(rng, b, n)
+    y = ref.unpack(np.asarray(stockham.fft_batched(ref.pack(x, dtype), bs=4)))
+    assert rel_err(y, ref.dft_ref(x)) < tol_for(dtype, n)
+
+
+@pytest.mark.parametrize("bs", [1, 2, 4, 8, 16, 32])
+def test_fft_batched_tile_sizes(rng, bs):
+    """Tile batch must not change the numbers (grid decomposition)."""
+    n, b = 128, 32
+    x = random_signal(rng, b, n)
+    xp = ref.pack(x, np.float32)
+    want = ref.unpack(np.asarray(stockham.fft_batched(xp, bs=32)))
+    got = ref.unpack(np.asarray(stockham.fft_batched(xp, bs=bs)))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@pytest.mark.parametrize("split_radix", [2, 4, 8])
+@pytest.mark.parametrize("base_max", [2, 8, 32])
+def test_fft_radix_plans_agree(rng, split_radix, base_max):
+    """Every template instantiation computes the same transform."""
+    n, b = 512, 4
+    x = random_signal(rng, b, n)
+    y = ref.unpack(np.asarray(stockham.fft_batched(
+        ref.pack(x, np.float64), bs=4,
+        split_radix=split_radix, base_max=base_max)))
+    assert rel_err(y, ref.dft_ref(x)) < tol_for(np.float64, n)
+
+
+def test_fft_batched_rejects_bad_args(rng):
+    x = ref.pack(random_signal(rng, 6, 64), np.float32)
+    with pytest.raises(ValueError):
+        stockham.fft_batched(x, bs=4)  # 6 % 4 != 0
+    big = ref.pack(random_signal(rng, 4, 8192), np.float32)
+    with pytest.raises(ValueError):
+        stockham.fft_batched(big, bs=4)  # exceeds MAX_TILE_N
+
+
+def test_fft_linearity(rng):
+    """FFT(a*x + y) == a*FFT(x) + FFT(y) — the property the two-sided
+    checksum scheme rests on (paper §III)."""
+    n, b = 256, 8
+    x = random_signal(rng, b, n)
+    y = random_signal(rng, b, n)
+    a = 2.5
+    f = lambda v: ref.unpack(np.asarray(
+        stockham.fft_batched(ref.pack(v, np.float64), bs=4)))
+    np.testing.assert_allclose(f(a * x + y), a * f(x) + f(y), atol=1e-9)
+
+
+def test_fft_delta_impulse(rng):
+    """FFT of a unit impulse at j is the DFT matrix row j."""
+    n = 64
+    x = np.zeros((4, n), dtype=np.complex128)
+    for b in range(4):
+        x[b, 7 * b] = 1.0
+    y = ref.unpack(np.asarray(stockham.fft_batched(ref.pack(x, np.float64), bs=4)))
+    for b in range(4):
+        want = np.exp(-2j * np.pi * 7 * b * np.arange(n) / n)
+        np.testing.assert_allclose(y[b], want, atol=1e-12)
+
+
+def test_ifft_roundtrip(rng):
+    import jax.numpy as jnp
+    from compile.kernels import cplx
+    n, b = 256, 4
+    x = random_signal(rng, b, n)
+    xr = jnp.asarray(x.real)
+    xi = jnp.asarray(x.imag)
+    yr, yi = stockham.fft_tile(xr, xi)
+    br, bi = stockham.ifft_tile(yr, yi)
+    np.testing.assert_allclose(np.asarray(br), x.real, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(bi), x.imag, atol=1e-10)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_naive_v0_matches(rng, n):
+    x = random_signal(rng, 4, n)
+    y = ref.unpack(np.asarray(stockham.fft_naive_multilaunch(ref.pack(x, np.float32))))
+    assert rel_err(y, ref.dft_ref(x)) < tol_for(np.float32, n)
+
+
+@pytest.mark.parametrize("n", [32, 1024, 4096])
+def test_vklike_matches(rng, n):
+    x = random_signal(rng, 4, n)
+    y = ref.unpack(np.asarray(stockham.fft_batched_vklike(ref.pack(x, np.float32), bs=4)))
+    assert rel_err(y, ref.dft_ref(x)) < tol_for(np.float32, n)
+
+
+def test_fuzz_shapes_and_values(rng):
+    """Hypothesis-style sweep: random (n, b, bs, dtype, scale) cases."""
+    for case in range(25):
+        n = 1 << int(rng.integers(1, 12))
+        bs = 1 << int(rng.integers(0, 4))
+        tiles = int(rng.integers(1, 4))
+        b = bs * tiles
+        dtype = np.float32 if rng.integers(2) else np.float64
+        scale = 10.0 ** rng.integers(-3, 4)
+        x = scale * random_signal(rng, b, n)
+        y = ref.unpack(np.asarray(stockham.fft_batched(ref.pack(x, dtype), bs=bs)))
+        assert rel_err(y, ref.dft_ref(x)) < tol_for(dtype, n), \
+            (case, n, b, bs, dtype, scale)

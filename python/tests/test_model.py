@@ -1,0 +1,134 @@
+"""Layer-2 pipeline tests: staged FFT, FT wrapping, builders, shapes."""
+
+import numpy as np
+import pytest
+
+from compile import codegen, model
+from compile.kernels import inject, ref
+from conftest import random_signal, rel_err, tol_for
+
+
+@pytest.mark.parametrize("n,prec", [
+    (8192, "f32"), (16384, "f32"), (65536, "f32"),
+    (1 << 17, "f32"), (8192, "f64"),
+])
+def test_staged_noft_matches_npfft(rng, n, prec):
+    cfg = codegen.default_config(n, prec, "noft", batch=4)
+    fn, _ = model.build_noft(cfg)
+    dt = np.float32 if prec == "f32" else np.float64
+    x = random_signal(rng, 4, n)
+    y = ref.unpack(np.asarray(fn(ref.pack(x, dt))[0]))
+    assert rel_err(y, np.fft.fft(x, axis=-1)) < tol_for(dt, n)
+
+
+@pytest.mark.parametrize("scheme", ["noft", "onesided", "ft_thread", "ft_block"])
+def test_single_stage_builders_match(rng, scheme):
+    cfg = codegen.default_config(256, "f32", scheme, batch=32)
+    fn, specs = model.BUILDERS[scheme](cfg)
+    x = random_signal(rng, 32, 256)
+    xp = ref.pack(x, np.float32)
+    args = (xp,) if scheme == "noft" else (xp, inject.none_descriptor())
+    outs = fn(*args)
+    y = ref.unpack(np.asarray(outs[0]))
+    assert rel_err(y, ref.dft_ref(x)) < tol_for(np.float32, 256)
+    # output shapes match eval_shape (the manifest contract)
+    import jax
+    shapes = jax.eval_shape(fn, *specs)
+    for got, want in zip(outs, shapes):
+        assert tuple(np.asarray(got).shape) == tuple(want.shape)
+
+
+def test_staged_ft_block_detect_locate_correct(rng):
+    n = 8192
+    cfg = codegen.default_config(n, "f32", "ft_block", batch=4)
+    fn, _ = model.build_ft_block(cfg)
+    x = random_signal(rng, 4, n)
+    xp = ref.pack(x, np.float32)
+    desc = np.array([1, 0, 2, 4444, 0, 31, 0, 0], dtype=np.int32)
+    y, meta, c2, yc2 = [np.asarray(a) for a in fn(xp, desc)]
+    m = meta[0]
+    resid = abs(m[0] + 1j * m[1]) / (m[2] + 1e-30)
+    assert resid > 1e-4
+    loc = int(round(float(((m[3] + 1j * m[4]) / (m[0] + 1j * m[1])).real))) - 1
+    assert loc == 2
+    cfn, _ = model.build_correction(cfg, k=1)
+    delta = np.asarray(cfn(c2, yc2)[0])
+    got = ref.unpack(y[loc]) + ref.unpack(delta[0])
+    want = np.fft.fft(x[loc])
+    assert np.max(np.abs(got - want)) < 1e-3 * np.max(np.abs(want))
+
+
+def test_staged_onesided_and_thread(rng):
+    n = 8192
+    x = random_signal(rng, 4, n)
+    xp = ref.pack(x, np.float32)
+    desc = np.array([1, 0, 1, 100, 1, 31, 1, 0], dtype=np.int32)
+    for scheme in ("onesided", "ft_thread"):
+        cfg = codegen.default_config(n, "f32", scheme, batch=4)
+        fn, _ = model.BUILDERS[scheme](cfg)
+        outs = [np.asarray(a) for a in fn(xp, desc)]
+        psig = outs[1]
+        r = np.abs(psig[..., 0] + 1j * psig[..., 1]) / (psig[..., 2] + 1e-30)
+        assert np.unravel_index(np.argmax(r), r.shape) == (0, 1), scheme
+
+
+def test_xlafft_builder(rng):
+    cfg = codegen.default_config(1024, "f32", "noft", batch=8)
+    fn, _ = model.build_xlafft(cfg)
+    x = random_signal(rng, 8, 1024)
+    y = ref.unpack(np.asarray(fn(ref.pack(x, np.float32))[0]))
+    assert rel_err(y, np.fft.fft(x, axis=-1)) < tol_for(np.float32, 1024)
+
+
+def test_checksum_builder(rng):
+    from compile.kernels import twiddle as tw
+    cfg = codegen.default_config(256, "f32", "noft", batch=32)
+    fn, _ = model.build_checksum(cfg)
+    x = random_signal(rng, 32, 256)
+    cs = np.asarray(fn(ref.pack(x, np.float32))[0])
+    want = x.reshape(cfg.tiles, cfg.bs, 256) @ tw.ew_row_np(256)
+    np.testing.assert_allclose(cs[..., 0] + 1j * cs[..., 1], want, atol=1e-2)
+
+
+def test_correction_staged_matches_ref(rng):
+    n = 8192
+    cfg = codegen.default_config(n, "f32", "noft", batch=4)
+    fn, _ = model.build_correction(cfg, k=2)
+    c2 = random_signal(rng, 2, n)
+    yc2 = random_signal(rng, 2, n)
+    delta = np.asarray(fn(ref.pack(c2, np.float32), ref.pack(yc2, np.float32))[0])
+    want = np.fft.fft(c2, axis=-1) - yc2
+    assert rel_err(ref.unpack(delta), want) < tol_for(np.float32, n)
+
+
+def test_kernel_config_validation():
+    with pytest.raises(ValueError):
+        codegen.KernelConfig(n=24, precision="f32", scheme="noft",
+                             batch=4, bs=4, factors=(24,))
+    with pytest.raises(ValueError):
+        codegen.KernelConfig(n=16, precision="f32", scheme="bogus",
+                             batch=4, bs=4, factors=(16,))
+    with pytest.raises(ValueError):
+        codegen.KernelConfig(n=16, precision="f32", scheme="noft",
+                             batch=5, bs=4, factors=(16,))
+    with pytest.raises(ValueError):
+        codegen.KernelConfig(n=16, precision="f32", scheme="noft",
+                             batch=4, bs=4, factors=(4, 2))
+
+
+def test_throughput_batch_invariants():
+    for n in (64, 1024, 4096, 1 << 18):
+        b = codegen.throughput_batch(n)
+        cfg = codegen.default_config(n)
+        assert b % cfg.bs == 0 or cfg.bs == b
+        assert b >= 1
+
+
+def test_table1_rows_shape():
+    rows = codegen.table1_rows()
+    assert len(rows) == 3
+    for row in rows:
+        prod = 1
+        for f in row["factors"]:
+            prod *= f
+        assert prod == row["N"]

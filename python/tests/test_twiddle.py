@@ -1,0 +1,89 @@
+"""Unit tests for twiddle constants, encodings and factorization plans."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import twiddle as tw
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 64, 1024, 1 << 14, 1 << 18])
+def test_ew_row_closed_form_matches_gemv(n):
+    """a = e1^T W via the geometric closed form == explicit GEMV."""
+    a = tw.ew_row_np(n)
+    if n <= 2048:
+        w = tw.dft_matrix_np(n)
+        want = tw.wang_e1_np(n) @ w
+        np.testing.assert_allclose(a, want, atol=1e-9 * n)
+    # full coverage property: every position is observable
+    assert np.min(np.abs(a)) > 1e-3
+
+
+@pytest.mark.parametrize("n", [4, 256, 4096, 1 << 16])
+def test_jnp_generators_match_np(n):
+    ar, ai = tw.ew_row_jnp(n, jnp.float64)
+    a = tw.ew_row_np(n)
+    np.testing.assert_allclose(np.asarray(ar), a.real, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(ai), a.imag, atol=1e-10)
+    er, ei = tw.wang_e1_jnp(n, jnp.float64)
+    e = tw.wang_e1_np(n)
+    np.testing.assert_allclose(np.asarray(er), e.real, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(ei), e.imag, atol=1e-12)
+
+
+def test_jnp_generators_f32_precision_large_n():
+    """Integer mod keeps FP32 twiddles accurate even at N = 2^18."""
+    n = 1 << 18
+    tr, ti = tw.twiddle_jnp(n, 512, 512, jnp.float32)
+    t = tw.twiddle_np(n, 512, 512)
+    assert np.max(np.abs(np.asarray(tr, np.float64) - t.real)) < 1e-6
+    assert np.max(np.abs(np.asarray(ti, np.float64) - t.imag)) < 1e-6
+
+
+@pytest.mark.parametrize("n", [2, 8, 32, 64, 4096, 1 << 18])
+def test_radix_plan_multiplies_to_n(n):
+    plan = tw.radix_plan(n)
+    prod = 1
+    for r in plan:
+        prod *= r
+    assert prod == n
+    assert all(r <= tw.BASE_RADIX_MAX for r in plan)
+
+
+def test_radix_plan_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        tw.radix_plan(24)
+    with pytest.raises(ValueError):
+        tw.radix_plan(0)
+
+
+@pytest.mark.parametrize("n,stages_want", [
+    (64, 1), (4096, 1), (8192, 2), (1 << 16, 2), (1 << 17, 3), (1 << 18, 3),
+])
+def test_kernel_factors_regimes(n, stages_want):
+    f = tw.kernel_factors(n, 4096)
+    assert len(f) == stages_want
+    prod = 1
+    for v in f:
+        prod *= v
+    assert prod == n
+    assert max(f) <= 4096
+
+
+def test_kernel_factors_forced_stages():
+    assert len(tw.kernel_factors(4096, 4096, stages=2)) == 2
+    with pytest.raises(ValueError):
+        tw.kernel_factors(1 << 18, 4096, stages=1)
+
+
+def test_dft_matrix_unitary_up_to_scale():
+    for r in (2, 4, 8, 16, 32):
+        w = tw.dft_matrix_np(r)
+        np.testing.assert_allclose(w @ w.conj().T, r * np.eye(r), atol=1e-10)
+
+
+def test_wang_e1_never_misses_sign_errors():
+    """The property the 1s-vector lacks: e1 has non-constant phase, so
+    +eps/-eps corruptions at different positions cannot cancel."""
+    e = tw.wang_e1_np(12)
+    assert not np.allclose(e, e[0])

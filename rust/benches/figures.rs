@@ -1,0 +1,37 @@
+//! `cargo bench --bench figures` — regenerates every paper table/figure
+//! (DESIGN.md §5) through the same report generators as
+//! `turbofft bench-figure all`, in quick mode by default.
+//!
+//! Set TURBOFFT_BENCH_FULL=1 for the full-depth run (more samples, 2000
+//! ROC trials) used for EXPERIMENTS.md.
+
+use turbofft::reports::{self, ReportCtx};
+use turbofft::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no artifacts at {dir:?}: run `make artifacts` first");
+        return Ok(());
+    }
+    let full = std::env::var("TURBOFFT_BENCH_FULL").ok().as_deref() == Some("1");
+    let rt = Runtime::new(&dir)?;
+    let ctx = ReportCtx::new(&rt, !full);
+    // honor `cargo bench -- fig12`-style filters
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    for id in reports::ALL_FIGURES {
+        if !filter.is_empty() && !filter.iter().any(|f| id.contains(f.as_str())) {
+            continue;
+        }
+        println!("\n================ {id} ================\n");
+        match reports::run_figure(&ctx, id) {
+            Ok(text) => println!("{text}"),
+            Err(e) => println!("[{id} skipped: {e}]"),
+        }
+    }
+    println!("\nCSV outputs under bench_results/.");
+    Ok(())
+}

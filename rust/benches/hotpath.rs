@@ -1,0 +1,117 @@
+//! `cargo bench --bench hotpath` — L3 hot-path microbenchmarks used by
+//! the performance pass (EXPERIMENTS.md §Perf): PJRT dispatch, host
+//! pack/unpack, checksum judging, batcher churn, native FFT, JSON parse.
+
+use turbofft::coordinator::batcher::{BatchPolicy, Batcher, Pending};
+use turbofft::coordinator::request::FftRequest;
+use turbofft::runtime::{HostTensor, InjectionDescriptor, Precision, Runtime, Scheme};
+use turbofft::signal::checksum;
+use turbofft::signal::complex::C64;
+use turbofft::signal::fft;
+use turbofft::util::bench::{self, BenchConfig};
+use turbofft::util::rng::Rng;
+use turbofft::workload::signals;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = BenchConfig::default();
+    let mut rng = Rng::new(1);
+    println!("== host-side hot paths ==");
+
+    // native FFT oracle
+    let x4k = signals::gaussian_batch(&mut rng, 16, 4096);
+    let r = bench::run_with_work("native fft 16x4096", &cfg,
+        bench::fft_flops(4096, 16), &mut || {
+            let _ = fft::fft_batched(&x4k, 4096);
+        });
+    println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+
+    // pack/unpack
+    let sigs = signals::gaussian_batch(&mut rng, 256, 1024);
+    let r = bench::run("pack 256x1024 -> f32 tensor", &cfg, || {
+        let _ = HostTensor::from_complex(&sigs, vec![256, 1024], false);
+    });
+    println!("{}", r.report_line());
+    let t = HostTensor::from_complex(&sigs, vec![256, 1024], false);
+    let r = bench::run("unpack 256x1024 <- f32 tensor", &cfg, || {
+        let _ = t.to_complex().unwrap();
+    });
+    println!("{}", r.report_line());
+
+    // checksum judging
+    let y = fft::fft_batched(&sigs, 1024);
+    let r = bench::run("host detect_locate 256x1024 (bs=16 tiles)", &cfg, || {
+        for t in 0..16 {
+            let _ = checksum::detect_locate_host(
+                &sigs[t * 16 * 1024..(t + 1) * 16 * 1024],
+                &y[t * 16 * 1024..(t + 1) * 16 * 1024],
+                1024,
+                16,
+            );
+        }
+    });
+    println!("{}", r.report_line());
+
+    // batcher churn
+    let r = bench::run("batcher push+pop 1024 requests", &cfg, || {
+        let mut b = Batcher::new();
+        let policy = BatchPolicy {
+            target_batch: 16,
+            max_delay: std::time::Duration::from_secs(1),
+        };
+        for i in 0..1024u64 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::mem::forget(rx);
+            b.push(Pending {
+                req: FftRequest::new(i, Precision::F32, vec![C64::ZERO; 64]),
+                reply: tx,
+            });
+        }
+        let _ = b.pop_ready(&policy, std::time::Instant::now());
+    });
+    println!("{}", r.report_line());
+
+    // JSON manifest parse
+    if let Ok(text) = std::fs::read_to_string(Runtime::default_dir().join("manifest.json")) {
+        let r = bench::run("manifest.json parse", &cfg, || {
+            let _ = turbofft::util::json::parse(&text).unwrap();
+        });
+        println!("{}", r.report_line());
+    }
+
+    // PJRT dispatch (device round-trip) if artifacts exist
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        println!("\n== device dispatch ==");
+        let rt = Runtime::new(&dir)?;
+        if let Some(e) = rt
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                e.op == turbofft::runtime::Op::Fft
+                    && e.scheme == Scheme::FtBlock
+                    && e.precision == Precision::F32
+            })
+            .min_by_key(|e| e.batch * e.n)
+        {
+            rt.handle().warmup(&e.name)?;
+            let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+            let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+            let desc = InjectionDescriptor::NONE.to_tensor();
+            let name = e.name.clone();
+            let handle = rt.handle();
+            let r = bench::run_with_work(
+                &format!("device exec {} ({}x{})", name, e.batch, e.n),
+                &cfg,
+                bench::fft_flops(e.n, e.batch),
+                &mut || {
+                    let _ = handle
+                        .execute(&name, vec![xt.clone(), desc.clone()])
+                        .unwrap();
+                },
+            );
+            println!("{}  ({:.3} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+        }
+    }
+    Ok(())
+}

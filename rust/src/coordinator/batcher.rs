@@ -1,0 +1,206 @@
+//! Dynamic batcher: groups per-(N, precision) request queues into
+//! executable-sized batches (the serving substrate; vLLM-router-style
+//! batch-or-timeout policy).
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::time::{Duration, Instant};
+
+use crate::runtime::Precision;
+
+use super::request::{FftRequest, RequestResult};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub n: usize,
+    pub precision: Precision,
+}
+
+/// A queued request plus its response channel.
+pub struct Pending {
+    pub req: FftRequest,
+    pub reply: Sender<RequestResult>,
+}
+
+/// One formed batch ready for execution.
+pub struct Batch {
+    pub key: BatchKey,
+    pub items: Vec<Pending>,
+    pub formed_at: Instant,
+}
+
+/// Flush policy: a queue is released when it reaches `target_batch` or
+/// its oldest element exceeds `max_delay`.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub target_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { target_batch: 16, max_delay: Duration::from_millis(2) }
+    }
+}
+
+#[derive(Default)]
+struct Queue {
+    items: Vec<Pending>,
+    oldest: Option<Instant>,
+}
+
+/// Accumulates pending requests per key and forms batches.
+///
+/// Not internally synchronized: the dispatcher thread owns it (single
+/// writer), which keeps the hot path allocation- and lock-free.
+#[derive(Default)]
+pub struct Batcher {
+    queues: HashMap<BatchKey, Queue>,
+}
+
+impl Batcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, p: Pending) {
+        let key = BatchKey { n: p.req.n, precision: p.req.precision };
+        let q = self.queues.entry(key).or_default();
+        if q.oldest.is_none() {
+            q.oldest = Some(p.req.submitted);
+        }
+        q.items.push(p);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(|q| q.items.len()).sum()
+    }
+
+    /// Pop every batch that is ready under `policy` at time `now`.
+    pub fn pop_ready(&mut self, policy: &BatchPolicy, now: Instant) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (key, q) in self.queues.iter_mut() {
+            let timed_out = q
+                .oldest
+                .map(|t| now.duration_since(t) >= policy.max_delay)
+                .unwrap_or(false);
+            while q.items.len() >= policy.target_batch {
+                let rest = q.items.split_off(policy.target_batch);
+                let batch_items = std::mem::replace(&mut q.items, rest);
+                out.push(Batch { key: *key, items: batch_items, formed_at: now });
+            }
+            if timed_out && !q.items.is_empty() {
+                let items = std::mem::take(&mut q.items);
+                out.push(Batch { key: *key, items, formed_at: now });
+            }
+            q.oldest = q.items.first().map(|p| p.req.submitted);
+        }
+        out
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let now = Instant::now();
+        self.queues
+            .drain()
+            .filter(|(_, q)| !q.items.is_empty())
+            .map(|(key, q)| Batch { key, items: q.items, formed_at: now })
+            .collect()
+    }
+
+    /// Time until the earliest queue would time out (dispatcher sleep hint).
+    pub fn next_deadline(&self, policy: &BatchPolicy) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.oldest)
+            .map(|t| t + policy.max_delay)
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::complex::C64;
+    use std::sync::mpsc::channel;
+
+    fn pending(id: u64, n: usize) -> Pending {
+        let (tx, _rx) = channel();
+        // leak the receiver: tests only exercise queueing
+        std::mem::forget(_rx);
+        Pending { req: FftRequest::new(id, Precision::F32, vec![C64::ZERO; n]), reply: tx }
+    }
+
+    #[test]
+    fn batches_on_target_size() {
+        let mut b = Batcher::new();
+        let policy = BatchPolicy { target_batch: 4, max_delay: Duration::from_secs(10) };
+        for i in 0..9 {
+            b.push(pending(i, 64));
+        }
+        let ready = b.pop_ready(&policy, Instant::now());
+        assert_eq!(ready.len(), 2);
+        assert!(ready.iter().all(|x| x.items.len() == 4));
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = Batcher::new();
+        let policy = BatchPolicy { target_batch: 64, max_delay: Duration::from_millis(1) };
+        b.push(pending(1, 64));
+        b.push(pending(2, 64));
+        assert!(b.pop_ready(&policy, Instant::now()).is_empty());
+        let later = Instant::now() + Duration::from_millis(5);
+        let ready = b.pop_ready(&policy, later);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].items.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn separates_keys() {
+        let mut b = Batcher::new();
+        let policy = BatchPolicy { target_batch: 2, max_delay: Duration::from_secs(10) };
+        b.push(pending(1, 64));
+        b.push(pending(2, 128));
+        b.push(pending(3, 64));
+        b.push(pending(4, 128));
+        let ready = b.pop_ready(&policy, Instant::now());
+        assert_eq!(ready.len(), 2);
+        for batch in &ready {
+            assert!(batch.items.iter().all(|p| p.req.n == batch.key.n));
+        }
+    }
+
+    #[test]
+    fn preserves_fifo_within_key() {
+        let mut b = Batcher::new();
+        let policy = BatchPolicy { target_batch: 3, max_delay: Duration::from_secs(10) };
+        for i in 0..3 {
+            b.push(pending(i, 64));
+        }
+        let ready = b.pop_ready(&policy, Instant::now());
+        let ids: Vec<u64> = ready[0].items.iter().map(|p| p.req.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new();
+        b.push(pending(1, 64));
+        b.push(pending(2, 256));
+        let drained = b.drain_all();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b = Batcher::new();
+        let policy = BatchPolicy { target_batch: 8, max_delay: Duration::from_millis(10) };
+        assert!(b.next_deadline(&policy).is_none());
+        b.push(pending(1, 64));
+        assert!(b.next_deadline(&policy).is_some());
+    }
+}

@@ -1,0 +1,92 @@
+//! Serving metrics: counters + latency distribution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_signals: AtomicU64,
+    pub faults_detected: AtomicU64,
+    pub corrected: AtomicU64,
+    pub recomputed: AtomicU64,
+    pub correction_launches: AtomicU64,
+    pub false_locates: AtomicU64,
+    latency: Mutex<Summary>,
+    batch_sizes: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latency.lock().unwrap().push(d.as_secs_f64());
+    }
+
+    pub fn record_batch(&self, size: usize, padded: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padded_signals.fetch_add(padded as u64, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(size as f64);
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        self.latency.lock().unwrap().clone()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        self.batch_sizes.lock().unwrap().mean()
+    }
+
+    pub fn report(&self) -> String {
+        let lat = self.latency_summary();
+        let ms = 1e3;
+        format!(
+            "requests: {} submitted, {} completed, {} failed\n\
+             batches:  {} formed (mean size {:.1}, {} padded signals)\n\
+             faults:   {} detected, {} corrected, {} recomputed, \
+             {} correction launches\n\
+             latency:  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.padded_signals.load(Ordering::Relaxed),
+            self.faults_detected.load(Ordering::Relaxed),
+            self.corrected.load(Ordering::Relaxed),
+            self.recomputed.load(Ordering::Relaxed),
+            self.correction_launches.load(Ordering::Relaxed),
+            lat.percentile(50.0) * ms,
+            lat.percentile(95.0) * ms,
+            lat.percentile(99.0) * ms,
+            lat.max() * ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(2));
+        m.record_latency(Duration::from_millis(4));
+        m.record_batch(8, 2);
+        let s = m.latency_summary();
+        assert_eq!(s.len(), 2);
+        assert!((s.mean() - 0.003).abs() < 1e-9);
+        assert_eq!(m.mean_batch_size(), 8.0);
+        assert!(m.report().contains("p95"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Layer-3 coordinator: the serving system around the AOT FFT artifacts.
+//!
+//! `Coordinator` is the public face: submit FFT requests, get responses.
+//! Internally: a dispatcher thread owns the dynamic `Batcher` and the
+//! scheduling `Engine`; the PJRT device lives on its own thread behind
+//! `DeviceHandle` (runtime::device). Fault tolerance — judging checksum
+//! metadata, delayed batched correction, recompute fallback — runs inside
+//! the engine, transparently to clients (the paper's §III/§IV-B pipeline).
+
+pub mod batcher;
+pub mod ft;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::{InjectionDescriptor, Precision, Runtime, Scheme};
+use crate::signal::complex::C64;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use request::{FftRequest, FftResponse, FtStatus, RequestError, RequestResult};
+pub use router::Router;
+pub use scheduler::{Engine, EngineConfig, InjectHook};
+
+/// Coordinator configuration.
+pub struct Config {
+    /// active checksum scheme for served requests
+    pub scheme: Scheme,
+    /// detection threshold delta (relative residual)
+    pub delta: f64,
+    pub policy: BatchPolicy,
+    /// injection hook for fault campaigns (None = clean)
+    pub inject: Option<InjectHook>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            scheme: Scheme::FtBlock,
+            delta: 4e-4,
+            policy: BatchPolicy::default(),
+            inject: None,
+        }
+    }
+}
+
+enum Msg {
+    Submit(batcher::Pending),
+    /// flush all queues + pending corrections, then ack
+    Quiesce(Sender<()>),
+    Shutdown,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    next_id: AtomicU64,
+    pub metrics: Arc<metrics::Metrics>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Build on top of a runtime, activating `cfg.scheme`.
+    pub fn new(runtime: &Runtime, cfg: Config) -> Result<Coordinator> {
+        let router = Router::build(&runtime.manifest, cfg.scheme)?;
+        let metrics = Arc::new(metrics::Metrics::new());
+        let engine_cfg = EngineConfig {
+            delta: cfg.delta,
+            correction_k: runtime.manifest.correction_k,
+        };
+        let inject: InjectHook = cfg
+            .inject
+            .unwrap_or_else(|| Box::new(|_, _| InjectionDescriptor::NONE));
+        let engine = Engine::new(
+            runtime.handle(),
+            router,
+            metrics.clone(),
+            engine_cfg,
+            inject,
+        );
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let policy = cfg.policy;
+        let join = std::thread::Builder::new()
+            .name("turbofft-dispatch".into())
+            .spawn(move || dispatcher_main(engine, policy, rx))?;
+        Ok(Coordinator {
+            tx,
+            next_id: AtomicU64::new(1),
+            metrics,
+            join: Some(join),
+        })
+    }
+
+    /// Submit a signal; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        precision: Precision,
+        data: Vec<C64>,
+    ) -> Receiver<RequestResult> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let req = FftRequest::new(id, precision, data);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let _ = self.tx.send(Msg::Submit(batcher::Pending { req, reply }));
+        rx
+    }
+
+    /// Submit and wait (convenience for examples/tests).
+    pub fn submit_sync(&self, precision: Precision, data: Vec<C64>) -> RequestResult {
+        let rx = self.submit(precision, data);
+        rx.recv().unwrap_or_else(|_| {
+            Err(RequestError { id: 0, message: "coordinator gone".into() })
+        })
+    }
+
+    /// Drain all queues and pending corrections (blocks until done).
+    pub fn quiesce(&self) {
+        let (tx, rx) = mpsc::channel();
+        if self.tx.send(Msg::Quiesce(tx)).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn dispatcher_main(
+    mut engine: Engine,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Msg>,
+) {
+    let mut batcher = Batcher::new();
+    'main: loop {
+        // sleep until either a message arrives or the oldest queue times out
+        enum Wake {
+            Message(Msg),
+            Timeout,
+            Disconnected,
+        }
+        let wake = match batcher.next_deadline(&policy) {
+            None => match rx.recv() {
+                Ok(m) => Wake::Message(m),
+                Err(_) => Wake::Disconnected,
+            },
+            Some(deadline) => {
+                let wait = deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(wait.max(Duration::from_micros(50))) {
+                    Ok(m) => Wake::Message(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => Wake::Timeout,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => Wake::Disconnected,
+                }
+            }
+        };
+        // drain the backlog before forming batches: submissions that are
+        // already in the channel belong in this scheduling round
+        let mut first = match wake {
+            Wake::Message(m) => Some(m),
+            Wake::Timeout => None,
+            Wake::Disconnected => Some(Msg::Shutdown),
+        };
+        loop {
+            let msg = match first.take() {
+                Some(m) => m,
+                None => match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                },
+            };
+            match msg {
+                Msg::Submit(p) => batcher.push(p),
+                other => {
+                    first = Some(other);
+                    break;
+                }
+            }
+        }
+        let wake = match first {
+            Some(m) => Wake::Message(m),
+            None => Wake::Timeout,
+        };
+        match wake {
+            Wake::Message(Msg::Submit(_)) => unreachable!("drained above"),
+            Wake::Message(Msg::Quiesce(ack)) => {
+                for b in batcher.drain_all() {
+                    engine.process_batch(b);
+                }
+                engine.flush_corrections();
+                let _ = ack.send(());
+                continue;
+            }
+            Wake::Message(Msg::Shutdown) | Wake::Disconnected => {
+                for b in batcher.drain_all() {
+                    engine.process_batch(b);
+                }
+                engine.flush_corrections();
+                break 'main;
+            }
+            Wake::Timeout => {}
+        }
+        let correction_age = policy.max_delay.max(Duration::from_millis(2)) * 4;
+        for b in batcher.pop_ready(&policy, Instant::now()) {
+            engine.process_batch(b);
+            // bound the correction delay even while a burst is draining
+            if engine.corrections_overdue(correction_age) {
+                engine.flush_corrections();
+            }
+        }
+        // quiet point: nothing queued -> flush partial correction groups
+        // ("delayed" ends when the pipeline has a bubble, §III-B); also
+        // bound the delay so held responses don't starve under load
+        if (batcher.queued() == 0 && engine.pending_corrections() > 0)
+            || engine.corrections_overdue(correction_age)
+        {
+            engine.flush_corrections();
+        }
+    }
+}

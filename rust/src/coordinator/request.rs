@@ -1,0 +1,75 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::{Duration, Instant};
+
+use crate::runtime::Precision;
+use crate::signal::complex::C64;
+
+/// A client-submitted FFT request: one complex signal of length `n`.
+#[derive(Debug, Clone)]
+pub struct FftRequest {
+    pub id: u64,
+    pub n: usize,
+    pub precision: Precision,
+    pub data: Vec<C64>,
+    pub submitted: Instant,
+}
+
+impl FftRequest {
+    pub fn new(id: u64, precision: Precision, data: Vec<C64>) -> Self {
+        assert!(data.len().is_power_of_two(), "signal length must be 2^k");
+        Self { id, n: data.len(), precision, data, submitted: Instant::now() }
+    }
+}
+
+/// How the fault-tolerance layer handled this request's tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FtStatus {
+    /// no FT scheme active (noft/xlafft baselines)
+    Unprotected,
+    /// checksums verified clean
+    Verified,
+    /// an SEU hit this signal and was corrected additively (delayed
+    /// batched correction — no recompute)
+    Corrected,
+    /// a fault in the same tile was corrected (this signal untouched)
+    TileCorrected,
+    /// the tile was re-executed (one-sided scheme, or uncorrectable)
+    Recomputed,
+}
+
+#[derive(Debug, Clone)]
+pub struct FftResponse {
+    pub id: u64,
+    pub data: Vec<C64>,
+    pub latency: Duration,
+    pub ft: FtStatus,
+    /// residual observed for this signal's tile (for ROC studies)
+    pub residual: f64,
+}
+
+/// Failure surfaced to the submitter.
+#[derive(Debug)]
+pub struct RequestError {
+    pub id: u64,
+    pub message: String,
+}
+
+pub type RequestResult = Result<FftResponse, RequestError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_records_size() {
+        let r = FftRequest::new(1, Precision::F32, vec![C64::ZERO; 64]);
+        assert_eq!(r.n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "2^k")]
+    fn rejects_non_pow2_signal() {
+        FftRequest::new(1, Precision::F32, vec![C64::ZERO; 12]);
+    }
+}

@@ -1,0 +1,151 @@
+//! The plan router: picks the AOT executable for a batch (the cuFFT-plan
+//! analog, backed by the manifest's generated-kernel parameter table).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Entry, Manifest, Op, Precision, Scheme};
+
+/// A resolved execution plan for one (N, precision, scheme).
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// FFT artifact variants sorted by batch size (ascending); the router
+    /// picks the smallest one that fits the queue (latency) or the
+    /// largest (throughput).
+    pub variants: Vec<Entry>,
+    pub correction: Option<Entry>,
+}
+
+impl Plan {
+    /// Choose the variant for `queued` pending signals.
+    pub fn pick(&self, queued: usize) -> &Entry {
+        for e in &self.variants {
+            if e.batch >= queued {
+                return e;
+            }
+        }
+        self.variants.last().expect("plan has at least one variant")
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|e| e.batch).unwrap_or(0)
+    }
+}
+
+/// Routes (n, precision) to plans for a fixed scheme.
+pub struct Router {
+    scheme: Scheme,
+    plans: HashMap<(usize, Precision), Plan>,
+}
+
+impl Router {
+    pub fn build(manifest: &Manifest, scheme: Scheme) -> Result<Router> {
+        let mut plans: HashMap<(usize, Precision), Plan> = HashMap::new();
+        for e in &manifest.entries {
+            if e.op != Op::Fft || e.scheme != scheme {
+                continue;
+            }
+            let key = (e.n, e.precision);
+            plans
+                .entry(key)
+                .or_insert_with(|| Plan { variants: Vec::new(), correction: None })
+                .variants
+                .push(e.clone());
+        }
+        if plans.is_empty() {
+            return Err(anyhow!(
+                "no '{scheme}' FFT artifacts in manifest (profile {:?})",
+                manifest.profile
+            ));
+        }
+        for ((n, prec), plan) in plans.iter_mut() {
+            plan.variants.sort_by_key(|e| e.batch);
+            plan.correction = manifest.find_correction(*n, *prec).cloned();
+        }
+        Ok(Router { scheme, plans })
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    pub fn plan(&self, n: usize, precision: Precision) -> Result<&Plan> {
+        self.plans.get(&(n, precision)).ok_or_else(|| {
+            anyhow!("no {} plan for N={n} {precision}", self.scheme)
+        })
+    }
+
+    pub fn supported_sizes(&self, precision: Precision) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .plans
+            .keys()
+            .filter(|(_, p)| *p == precision)
+            .map(|(n, _)| *n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let text = r#"{
+          "version": 1, "profile": "test", "correction_k": 4, "max_tile_n": 4096,
+          "entries": [
+            {"name": "small", "file": "s.hlo.txt", "op": "fft", "scheme": "ft_block",
+             "n": 256, "precision": "f32", "batch": 16, "bs": 16, "tiles": 1,
+             "factors": [256], "stages": 1,
+             "inputs": [{"shape": [16, 256, 2], "dtype": "float32"},
+                        {"shape": [8], "dtype": "int32"}],
+             "outputs": [{"shape": [16, 256, 2], "dtype": "float32"}]},
+            {"name": "big", "file": "b.hlo.txt", "op": "fft", "scheme": "ft_block",
+             "n": 256, "precision": "f32", "batch": 4096, "bs": 16, "tiles": 256,
+             "factors": [256], "stages": 1,
+             "inputs": [{"shape": [4096, 256, 2], "dtype": "float32"},
+                        {"shape": [8], "dtype": "int32"}],
+             "outputs": [{"shape": [4096, 256, 2], "dtype": "float32"}]},
+            {"name": "corr", "file": "c.hlo.txt", "op": "correct", "scheme": "noft",
+             "n": 256, "precision": "f32", "batch": 4, "bs": 4, "tiles": 1,
+             "factors": [256], "stages": 1,
+             "inputs": [{"shape": [4, 256, 2], "dtype": "float32"},
+                        {"shape": [4, 256, 2], "dtype": "float32"}],
+             "outputs": [{"shape": [4, 256, 2], "dtype": "float32"}]}
+          ]}"#;
+        Manifest::parse(text, Path::new("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn picks_latency_vs_throughput_variant() {
+        let r = Router::build(&manifest(), Scheme::FtBlock).unwrap();
+        let plan = r.plan(256, Precision::F32).unwrap();
+        assert_eq!(plan.pick(3).name, "small");
+        assert_eq!(plan.pick(16).name, "small");
+        assert_eq!(plan.pick(17).name, "big");
+        assert_eq!(plan.pick(100_000).name, "big");
+        assert!(plan.correction.is_some());
+    }
+
+    #[test]
+    fn missing_scheme_is_error() {
+        assert!(Router::build(&manifest(), Scheme::OneSided).is_err());
+    }
+
+    #[test]
+    fn missing_size_is_error() {
+        let r = Router::build(&manifest(), Scheme::FtBlock).unwrap();
+        assert!(r.plan(1024, Precision::F32).is_err());
+        assert!(r.plan(256, Precision::F64).is_err());
+    }
+
+    #[test]
+    fn supported_sizes_sorted() {
+        let r = Router::build(&manifest(), Scheme::FtBlock).unwrap();
+        assert_eq!(r.supported_sizes(Precision::F32), vec![256]);
+    }
+}

@@ -1,0 +1,7 @@
+//! Fault-injection campaigns and detector calibration (paper §II-A, §V-C).
+
+pub mod campaign;
+pub mod roc;
+
+pub use campaign::{Campaign, CampaignConfig, CampaignOutcome, TrialRecord};
+pub use roc::{roc_curve, RocPoint};

@@ -1,0 +1,148 @@
+//! ROC analysis of the checksum detector (paper Fig 15).
+//!
+//! The kernels export raw residuals; the threshold delta is applied here,
+//! so one campaign's labeled residuals generate the whole ROC curve —
+//! detection rate and false-alarm rate as delta sweeps.
+
+#[derive(Debug, Clone, Copy)]
+pub struct RocPoint {
+    pub delta: f64,
+    pub detection_rate: f64,
+    pub false_alarm_rate: f64,
+}
+
+/// Sweep thresholds over labeled residual samples (injected?, residual).
+/// Non-finite residuals count as "above any threshold" (always detected).
+pub fn roc_curve(samples: &[(bool, f64)], points: usize) -> Vec<RocPoint> {
+    let finite: Vec<f64> = samples
+        .iter()
+        .map(|&(_, r)| r)
+        .filter(|r| r.is_finite() && *r > 0.0)
+        .collect();
+    let (lo, hi) = finite.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &r| {
+        (lo.min(r), hi.max(r))
+    });
+    let (lo, hi) = if finite.is_empty() {
+        (1e-12, 1.0)
+    } else {
+        // clamp the sweep span: residuals from non-finite-adjacent faults
+        // can reach ~1e300 and would blow up the log spacing
+        let lo = lo * 0.5;
+        (lo, (hi * 2.0).min(lo * 1e16))
+    };
+    let n_inj = samples.iter().filter(|&&(i, _)| i).count().max(1);
+    let n_clean = samples.iter().filter(|&&(i, _)| !i).count().max(1);
+    (0..points)
+        .map(|i| {
+            // log-spaced thresholds
+            let t = lo * (hi / lo).powf(i as f64 / (points - 1).max(1) as f64);
+            let mut det = 0usize;
+            let mut fa = 0usize;
+            for &(inj, r) in samples {
+                let fired = !(r <= t); // NaN/Inf fire
+                if inj && fired {
+                    det += 1;
+                }
+                if !inj && fired {
+                    fa += 1;
+                }
+            }
+            RocPoint {
+                delta: t,
+                detection_rate: det as f64 / n_inj as f64,
+                false_alarm_rate: fa as f64 / n_clean as f64,
+            }
+        })
+        .collect()
+}
+
+/// Area under the ROC curve (trapezoid over false-alarm axis).
+pub fn auc(points: &[RocPoint]) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points
+        .iter()
+        .map(|p| (p.false_alarm_rate, p.detection_rate))
+        .collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // upper envelope: at equal false-alarm rate keep the best detection
+    pts.dedup_by(|next, prev| {
+        if next.0 == prev.0 {
+            prev.1 = prev.1.max(next.1);
+            true
+        } else {
+            false
+        }
+    });
+    let mut area = 0.0;
+    // extend to the (0,?) and (1,1) corners
+    if let Some(first) = pts.first().copied() {
+        area += first.0 * first.1 / 2.0;
+    }
+    for w in pts.windows(2) {
+        area += (w[1].0 - w[0].0) * (w[0].1 + w[1].1) / 2.0;
+    }
+    if let Some(last) = pts.last().copied() {
+        area += (1.0 - last.0) * (last.1 + 1.0) / 2.0;
+    }
+    area.min(1.0)
+}
+
+/// Pick the smallest delta whose false-alarm rate is below `max_fa`.
+pub fn calibrate_delta(samples: &[(bool, f64)], max_fa: f64) -> f64 {
+    let curve = roc_curve(samples, 256);
+    curve
+        .iter()
+        .filter(|p| p.false_alarm_rate <= max_fa)
+        .map(|p| p.delta)
+        .fold(f64::INFINITY, f64::min)
+        .min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth() -> Vec<(bool, f64)> {
+        // clean residuals ~1e-6, injected ~1e-3: perfectly separable
+        let mut v = Vec::new();
+        for i in 0..100 {
+            v.push((false, 1e-6 * (1.0 + (i % 7) as f64 / 10.0)));
+            v.push((true, 1e-3 * (1.0 + (i % 5) as f64 / 10.0)));
+        }
+        v
+    }
+
+    #[test]
+    fn separable_data_has_perfect_operating_point() {
+        let curve = roc_curve(&synth(), 64);
+        assert!(curve
+            .iter()
+            .any(|p| p.detection_rate == 1.0 && p.false_alarm_rate == 0.0));
+        assert!(auc(&curve) > 0.99);
+    }
+
+    #[test]
+    fn extreme_thresholds_behave() {
+        let curve = roc_curve(&synth(), 64);
+        let first = curve.first().unwrap(); // tiny threshold: everything fires
+        assert_eq!(first.detection_rate, 1.0);
+        assert_eq!(first.false_alarm_rate, 1.0);
+        let last = curve.last().unwrap(); // huge threshold: nothing fires
+        assert_eq!(last.detection_rate, 0.0);
+        assert_eq!(last.false_alarm_rate, 0.0);
+    }
+
+    #[test]
+    fn nonfinite_residuals_always_fire() {
+        let samples = vec![(true, f64::INFINITY), (true, f64::NAN), (false, 1e-7)];
+        let curve = roc_curve(&samples, 16);
+        for p in curve {
+            assert_eq!(p.detection_rate, 1.0, "delta={}", p.delta);
+        }
+    }
+
+    #[test]
+    fn calibration_picks_zero_fa_threshold() {
+        let d = calibrate_delta(&synth(), 0.0);
+        assert!(d > 1.2e-6 && d < 1e-3, "d={d}");
+    }
+}

@@ -1,0 +1,13 @@
+//! TurboFFT: a high-performance FFT with two-sided-checksum fault
+//! tolerance — full-system reproduction of Wu et al. (2024) as a
+//! three-layer rust + JAX + Pallas stack. See DESIGN.md.
+
+pub mod coordinator;
+pub mod faults;
+pub mod perfmodel;
+pub mod plan;
+pub mod reports;
+pub mod runtime;
+pub mod signal;
+pub mod workload;
+pub mod util;

@@ -1,0 +1,317 @@
+//! `turbofft` — the leader binary: CLI over the serving coordinator,
+//! fault campaigns, and the figure/table regenerators.
+//!
+//! Subcommands:
+//!   info                      manifest + platform summary
+//!   run                       one FFT through the runtime, verified
+//!   serve                     replay a Poisson trace through the coordinator
+//!   roc                       detector calibration campaign (Fig 15 data)
+//!   inject                    serving under live error injection
+//!   bench-figure <id|all>     regenerate a paper table/figure
+//!   selftest                  quick end-to-end health check
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use turbofft::coordinator::{BatchPolicy, Config, Coordinator, FtStatus};
+use turbofft::faults::{roc, Campaign, CampaignConfig};
+use turbofft::reports::{self, ReportCtx};
+use turbofft::runtime::{Precision, Runtime, Scheme};
+use turbofft::signal::{complex, fft};
+use turbofft::util::cli::Args;
+use turbofft::util::rng::Rng;
+use turbofft::workload::{signals, trace};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = argv[1..].to_vec();
+    let code = match dispatch(&cmd, &rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("turbofft {cmd}: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "usage: turbofft <command> [options]\n\
+     commands:\n\
+       info                         manifest + platform summary\n\
+       run    [--n 1024] [--prec f32] [--scheme ft_block] [--batch 16]\n\
+       serve  [--rate 500] [--secs 1.0] [--scheme ft_block] [--delta 2e-4]\n\
+       roc    [--trials 400] [--n 1024] [--prec f32]\n\
+       inject [--requests 128] [--rate 0.25] [--scheme ft_block]\n\
+       bench-figure <table1|fig8..fig21|all> [--quick] [--trials N]\n\
+       selftest\n\
+     global: --artifacts DIR (default ./artifacts or $TURBOFFT_ARTIFACTS)\n"
+        .into()
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    let args = Args::parse_with_bools(rest, &["quick", "verbose", "csv"])
+        .map_err(|e| anyhow!(e))?;
+    let dir: PathBuf = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Runtime::default_dir);
+    match cmd {
+        "info" => cmd_info(&dir),
+        "run" => cmd_run(&dir, &args),
+        "serve" => cmd_serve(&dir, &args),
+        "roc" => cmd_roc(&dir, &args),
+        "inject" => cmd_inject(&dir, &args),
+        "bench-figure" => cmd_bench_figure(&dir, &args),
+        "selftest" => cmd_selftest(&dir),
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n{}", usage())),
+    }
+}
+
+fn parse_prec(s: &str) -> Result<Precision> {
+    Precision::parse(s).map_err(|e| anyhow!(e))
+}
+
+fn cmd_info(dir: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(dir)?;
+    let m = &rt.manifest;
+    println!(
+        "artifacts: {:?} (profile {}, manifest v{}, correction_k {})",
+        m.dir, m.profile, m.version, m.correction_k
+    );
+    println!("entries: {}", m.entries.len());
+    let sizes = m.sizes();
+    println!("FFT sizes: {:?}", sizes);
+    for scheme in ["noft", "onesided", "ft_thread", "ft_block", "vklike", "xlafft"] {
+        let s = Scheme::parse(scheme).unwrap();
+        let count = m
+            .entries
+            .iter()
+            .filter(|e| e.scheme == s && e.op == turbofft::runtime::Op::Fft)
+            .count();
+        println!("  {scheme:<10} {count} artifacts");
+    }
+    Ok(())
+}
+
+fn cmd_run(dir: &PathBuf, args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 1024).map_err(|e| anyhow!(e))?;
+    let prec = parse_prec(&args.str_or("prec", "f32"))?;
+    let scheme = Scheme::parse(&args.str_or("scheme", "ft_block")).map_err(|e| anyhow!(e))?;
+    let batch = args.usize_or("batch", 16).map_err(|e| anyhow!(e))?;
+
+    let rt = Runtime::new(dir)?;
+    let coord = Coordinator::new(&rt, Config { scheme, ..Default::default() })?;
+    let mut rng = Rng::new(42);
+    let mut rxs = Vec::new();
+    let mut inputs = Vec::new();
+    for _ in 0..batch {
+        let x = signals::gaussian_batch(&mut rng, 1, n);
+        inputs.push(x.clone());
+        rxs.push(coord.submit(prec, x));
+    }
+    let mut worst = 0.0f64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator dropped request"))?
+            .map_err(|e| anyhow!("request {}: {}", e.id, e.message))?;
+        // verify against the native rust FFT
+        let want = fft::fft(&inputs[i]);
+        let scale = complex::max_abs(&want).max(1e-30);
+        let err = complex::max_abs_diff(&resp.data, &want) / scale;
+        worst = worst.max(err);
+        if i == 0 {
+            println!(
+                "request {}: n={n} latency {:.3} ms ft={:?} residual {:.2e}",
+                resp.id,
+                resp.latency.as_secs_f64() * 1e3,
+                resp.ft,
+                resp.residual
+            );
+        }
+    }
+    println!("{batch} requests complete; worst error vs native FFT: {worst:.3e}");
+    println!("{}", coord.metrics.report());
+    if worst > 1e-2 {
+        return Err(anyhow!("verification failed"));
+    }
+    Ok(())
+}
+
+fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
+    let rate = args.f64_or("rate", 500.0).map_err(|e| anyhow!(e))?;
+    let secs = args.f64_or("secs", 1.0).map_err(|e| anyhow!(e))?;
+    let delta = args.f64_or("delta", 2e-4).map_err(|e| anyhow!(e))?;
+    let scheme = Scheme::parse(&args.str_or("scheme", "ft_block")).map_err(|e| anyhow!(e))?;
+
+    let rt = Runtime::new(dir)?;
+    // restrict the size mix to sizes the manifest actually serves
+    let sizes = rt.manifest.sizes();
+    let mix: Vec<(usize, f64)> = [(256usize, 0.5), (1024, 0.3), (4096, 0.2)]
+        .into_iter()
+        .filter(|(n, _)| sizes.contains(n))
+        .collect();
+    if mix.is_empty() {
+        return Err(anyhow!("no servable sizes in manifest"));
+    }
+    let tcfg = trace::TraceConfig {
+        rate,
+        duration_secs: secs,
+        size_mix: mix,
+        seed: 11,
+    };
+    let events = trace::generate(&tcfg);
+    println!("trace: {} arrivals over {secs}s at ~{rate}/s", events.len());
+
+    let coord = Coordinator::new(&rt, Config {
+        scheme,
+        delta,
+        policy: BatchPolicy::default(),
+        inject: None,
+    })?;
+    // warm all plans so the replay measures steady state
+    for n in tcfg.size_mix.iter().map(|&(n, _)| n) {
+        let _ = coord.submit_sync(Precision::F32, vec![complex::C64::ONE; n]);
+    }
+
+    let mut rng = Rng::new(99);
+    let start = std::time::Instant::now();
+    let mut rxs = Vec::with_capacity(events.len());
+    for ev in &events {
+        let target = std::time::Duration::from_secs_f64(ev.at);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        rxs.push(coord.submit(Precision::F32, signals::gaussian_batch(&mut rng, 1, ev.n)));
+    }
+    let mut ok = 0;
+    let mut verified = 0;
+    for rx in rxs {
+        if let Ok(Ok(r)) = rx.recv() {
+            ok += 1;
+            if matches!(r.ft, FtStatus::Verified) {
+                verified += 1;
+            }
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{} requests in {wall:.2}s ({:.0} req/s), {verified} verified",
+        events.len(),
+        ok as f64 / wall
+    );
+    println!("{}", coord.metrics.report());
+    Ok(())
+}
+
+fn cmd_roc(dir: &PathBuf, args: &Args) -> Result<()> {
+    let trials = args.usize_or("trials", 400).map_err(|e| anyhow!(e))?;
+    let n = args.usize_or("n", 1024).map_err(|e| anyhow!(e))?;
+    let prec = parse_prec(&args.str_or("prec", "f32"))?;
+    let rt = Runtime::new(dir)?;
+    let entry = turbofft::reports::common::serving_entry(&rt, n, prec, Scheme::FtBlock)
+        .or_else(|| turbofft::reports::common::throughput_entry(&rt, n, prec, Scheme::FtBlock))
+        .ok_or_else(|| anyhow!("no ft_block artifact for n={n} {prec}"))?;
+    println!("campaign: {} trials on {}", trials, entry.name);
+    let handle = rt.handle();
+    handle.warmup(&entry.name)?;
+    let outcome = Campaign {
+        device: &handle,
+        entry,
+        cfg: CampaignConfig { trials, ..Default::default() },
+    }
+    .run()?;
+    let samples = outcome.labeled_residuals();
+    let curve = roc::roc_curve(&samples, 20);
+    println!("{:>12} {:>10} {:>12}", "delta", "detection", "false-alarm");
+    for p in &curve {
+        println!(
+            "{:>12.3e} {:>10.3} {:>12.3}",
+            p.delta, p.detection_rate, p.false_alarm_rate
+        );
+    }
+    println!(
+        "AUC {:.4}; detection {:.1}% false-alarm {:.1}% locate {:.1}%",
+        roc::auc(&curve),
+        100.0 * outcome.detection_rate(),
+        100.0 * outcome.false_alarm_rate(),
+        100.0 * outcome.location_accuracy()
+    );
+    Ok(())
+}
+
+fn cmd_inject(dir: &PathBuf, args: &Args) -> Result<()> {
+    let rt = Runtime::new(dir)?;
+    let ctx = ReportCtx {
+        rt: &rt,
+        bench: turbofft::util::bench::BenchConfig::quick(),
+        trials: args.usize_or("requests", 128).map_err(|e| anyhow!(e))?,
+        csv: false,
+        skip_measure: false,
+    };
+    let report = reports::fig16_inject::run(&ctx, "A100")?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_bench_figure(dir: &PathBuf, args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("which figure? (table1, fig8..fig21, all)"))?;
+    let quick = args.bool_or("quick", false).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::new(dir)?;
+    let mut ctx = ReportCtx::new(&rt, quick);
+    if let Some(t) = args.get("trials") {
+        ctx.trials = t.parse().map_err(|e| anyhow!("--trials: {e}"))?;
+    }
+    let ids: Vec<&str> = if id == "all" {
+        reports::ALL_FIGURES.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for fid in ids {
+        println!("\n================ {fid} ================\n");
+        match reports::run_figure(&ctx, fid) {
+            Ok(text) => println!("{text}"),
+            Err(e) => println!("[{fid} skipped: {e}]"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_selftest(dir: &PathBuf) -> Result<()> {
+    let rt = Runtime::new(dir)?;
+    println!("manifest: {} entries", rt.manifest.entries.len());
+    // 1. plain FFT correctness through the coordinator
+    let coord = Coordinator::new(&rt, Config {
+        scheme: Scheme::FtBlock,
+        ..Default::default()
+    })?;
+    let mut rng = Rng::new(7);
+    let n = *rt.manifest.sizes().first().ok_or_else(|| anyhow!("no sizes"))?;
+    let x = signals::gaussian_batch(&mut rng, 1, n);
+    let resp = coord
+        .submit_sync(Precision::F32, x.clone())
+        .map_err(|e| anyhow!("{}", e.message))?;
+    let want = fft::fft(&x);
+    let err = complex::max_abs_diff(&resp.data, &want) / complex::max_abs(&want);
+    println!("fft n={n}: err {err:.2e} ft={:?}", resp.ft);
+    if err > 1e-3 {
+        return Err(anyhow!("selftest FAILED: error too large"));
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! GPU hardware parameters for the perf model (public datasheet numbers,
+//! matching the paper's §V testbed description).
+
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM/GDDR bandwidth, bytes per second
+    pub mem_bw: f64,
+    /// peak FP32 FLOP/s
+    pub fp32_flops: f64,
+    /// peak FP64 FLOP/s
+    pub fp64_flops: f64,
+    /// special-function (sin/cos) ops per second, FP32
+    pub sfu_ops: f64,
+    /// shared memory per threadblock, bytes
+    pub smem_bytes: usize,
+    /// kernel launch + sync overhead, seconds
+    pub launch_overhead: f64,
+    /// achievable fraction of peak bandwidth for coalesced streams
+    pub bw_efficiency: f64,
+    /// achievable fraction of peak bandwidth for the scattered stride
+    /// pattern of the 3rd launch before the N1xN3 plane fix (§IV-A4)
+    pub bw_efficiency_scattered: f64,
+}
+
+/// NVIDIA A100-PCIE-40GB (paper §V: 19.5/9.7 TFLOPS, 1.55 TB/s).
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100",
+    mem_bw: 1.55e12,
+    fp32_flops: 19.5e12,
+    fp64_flops: 9.7e12,
+    // 4 SFU/SM * 108 SM * 1.41 GHz ~ 0.6e12; sin+cos pairs cost more
+    sfu_ops: 0.55e12,
+    smem_bytes: 192 * 1024,
+    launch_overhead: 5e-6,
+    bw_efficiency: 0.85,
+    bw_efficiency_scattered: 0.55,
+};
+
+/// NVIDIA Tesla T4 (paper §V: 8.1 TFLOPS FP32, 0.253 FP64, 320 GB/s).
+pub const T4: GpuSpec = GpuSpec {
+    name: "T4",
+    mem_bw: 320e9,
+    fp32_flops: 8.1e12,
+    fp64_flops: 0.253e12,
+    sfu_ops: 0.25e12,
+    smem_bytes: 64 * 1024,
+    launch_overhead: 5e-6,
+    bw_efficiency: 0.8,
+    bw_efficiency_scattered: 0.5,
+};
+
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "a100" => Some(A100),
+        "t4" => Some(T4),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("A100").unwrap().name, "A100");
+        assert_eq!(by_name("t4").unwrap().name, "T4");
+        assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn t4_fp64_is_crippled() {
+        // the effect Fig 18 shows: T4 FP64 peak is ~3% of FP32
+        assert!(T4.fp64_flops / T4.fp32_flops < 0.05);
+    }
+}

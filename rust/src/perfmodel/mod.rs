@@ -1,0 +1,16 @@
+//! Analytic GPU performance model (the testbed substitute, DESIGN.md §1).
+//!
+//! The paper's absolute GFLOPS surfaces (Figs 8-14, 17-21) were measured
+//! on A100/T4 hardware we don't have; this model predicts them from first
+//! principles — a roofline over memory traffic, FLOP count, special-
+//! function (trig) throughput and kernel-launch overhead, with the FT
+//! schemes' extra traffic/compute added per the paper's §IV-B analysis.
+//! Every number it produces is labelled *modelled* in the reports; all
+//! overhead *ratios* are additionally measured for real on the PJRT-CPU
+//! backend.
+
+pub mod cost;
+pub mod gpu;
+
+pub use cost::{predict, FtScheme, KernelShape, Prediction};
+pub use gpu::GpuSpec;

@@ -1,0 +1,6 @@
+//! Kernel planning: the rust mirror of the code-generation parameter
+//! table (python/compile/codegen.py, paper §IV-B3 / Table I).
+
+pub mod params;
+
+pub use params::{factors_for, stages_for, table1, tile_bs, PlanParams, MAX_TILE_N, STAGE2_MAX};

@@ -1,0 +1,121 @@
+//! The semi-empirical kernel parameter table (Table I analog).
+//!
+//! Mirrors `python/compile/codegen.py` exactly — the property suite
+//! asserts both sides agree through the manifest, so a drift between the
+//! code generator and the router's expectations is caught in CI.
+
+/// Largest single-tile FFT (VMEM budget analog, = stockham.MAX_TILE_N).
+pub const MAX_TILE_N: usize = 4096;
+/// 2-launch regime upper bound (scaled from the paper's 2^22).
+pub const STAGE2_MAX: usize = 1 << 16;
+
+/// Full parameter vector for one kernel plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanParams {
+    pub n: usize,
+    pub factors: Vec<usize>,
+    pub stages: usize,
+    pub bs: usize,
+    pub split_radix: usize,
+    pub base_max: usize,
+}
+
+/// Launch count for an FFT size (1/2/3-launch regimes, §IV-B3).
+pub fn stages_for(n: usize) -> usize {
+    if n <= MAX_TILE_N {
+        1
+    } else if n <= STAGE2_MAX {
+        2
+    } else {
+        3
+    }
+}
+
+/// Balanced power-of-two factorization into `stages_for(n)` factors.
+pub fn factors_for(n: usize) -> Vec<usize> {
+    assert!(n.is_power_of_two() && n >= 2, "bad FFT size {n}");
+    let stages = stages_for(n);
+    let bits = n.trailing_zeros() as usize;
+    let base = bits / stages;
+    let extra = bits % stages;
+    (0..stages)
+        .map(|i| 1usize << (base + usize::from(i < extra)))
+        .collect()
+}
+
+/// Signals per tile (Table I 'bs' column, VMEM-scaled).
+pub fn tile_bs(n: usize) -> usize {
+    if n <= 64 {
+        32
+    } else if n <= 256 {
+        16
+    } else if n <= 1024 {
+        8
+    } else {
+        4
+    }
+}
+
+/// Throughput batch: hold batch*N ~ 2^20 elements (scaled 2^28 analog).
+pub fn throughput_batch(n: usize) -> usize {
+    let b = ((1usize << 20) / n).clamp(1, 4096);
+    let bs = tile_bs(n.min(MAX_TILE_N));
+    ((b / bs) * bs).max(bs.min(b)).max(1)
+}
+
+/// The rows printed as our Table I reproduction.
+pub fn table1() -> Vec<PlanParams> {
+    [1usize << 10, 1 << 14, 1 << 17]
+        .into_iter()
+        .map(|n| PlanParams {
+            n,
+            factors: factors_for(n),
+            stages: stages_for(n),
+            bs: if stages_for(n) == 1 { tile_bs(n) } else { throughput_batch(n) },
+            split_radix: 8,
+            base_max: 32,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regimes() {
+        assert_eq!(stages_for(64), 1);
+        assert_eq!(stages_for(4096), 1);
+        assert_eq!(stages_for(8192), 2);
+        assert_eq!(stages_for(1 << 16), 2);
+        assert_eq!(stages_for(1 << 17), 3);
+    }
+
+    #[test]
+    fn factors_multiply_back() {
+        for shift in 1..=22 {
+            let n = 1usize << shift;
+            let f = factors_for(n);
+            assert_eq!(f.iter().product::<usize>(), n, "n={n}");
+            assert!(f.iter().all(|&x| x <= MAX_TILE_N), "n={n} {f:?}");
+            assert_eq!(f.len(), stages_for(n));
+        }
+    }
+
+    #[test]
+    fn throughput_batch_divisible_by_tile() {
+        for n in [64usize, 256, 1024, 4096] {
+            let b = throughput_batch(n);
+            assert_eq!(b % tile_bs(n), 0, "n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn table1_has_three_regimes() {
+        let t = table1();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].stages, 1);
+        assert_eq!(t[1].stages, 2);
+        assert_eq!(t[2].stages, 3);
+    }
+}

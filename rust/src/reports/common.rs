@@ -1,0 +1,178 @@
+//! Shared measurement helpers for the figure regenerators.
+
+use anyhow::Result;
+
+use crate::runtime::{Entry, HostTensor, InjectionDescriptor, Precision, Runtime, Scheme};
+use crate::signal::complex::C64;
+use crate::util::bench::{self, BenchConfig, BenchResult};
+use crate::util::rng::Rng;
+use crate::workload::signals;
+
+/// Measure one artifact's execution (inputs generated once, reused).
+pub fn measure_entry(
+    rt: &Runtime,
+    entry: &Entry,
+    cfg: &BenchConfig,
+) -> Result<BenchResult> {
+    let mut rng = Rng::new(0xBE_AC4);
+    let x = signals::gaussian_batch(&mut rng, entry.batch, entry.n);
+    let f64p = entry.precision == Precision::F64;
+    let xt = HostTensor::from_complex(&x, vec![entry.batch, entry.n], f64p);
+    let desc = InjectionDescriptor::NONE.to_tensor();
+    let handle = rt.handle();
+    handle.warmup(&entry.name)?;
+    let takes_desc = entry.scheme.takes_descriptor();
+    let name = entry.name.clone();
+    let mut err = None;
+    let res = bench::run_with_work(
+        &entry.name,
+        cfg,
+        bench::fft_flops(entry.n, entry.batch),
+        &mut || {
+            let mut inputs = vec![xt.clone()];
+            if takes_desc {
+                inputs.push(desc.clone());
+            }
+            if let Err(e) = handle.execute(&name, inputs) {
+                err = Some(e);
+            }
+        },
+    );
+    if let Some(e) = err {
+        return Err(e);
+    }
+    Ok(res)
+}
+
+/// Find the throughput-batch FFT entry for (scheme, n, precision).
+pub fn throughput_entry<'a>(
+    rt: &'a Runtime,
+    n: usize,
+    precision: Precision,
+    scheme: Scheme,
+) -> Option<&'a Entry> {
+    rt.manifest
+        .find_fft(n, precision, scheme)
+        .into_iter()
+        .filter(|e| !e.name.starts_with("serve_"))
+        .max_by_key(|e| e.batch)
+}
+
+/// The serving-batch (small, latency-oriented) entry if present.
+pub fn serving_entry<'a>(
+    rt: &'a Runtime,
+    n: usize,
+    precision: Precision,
+    scheme: Scheme,
+) -> Option<&'a Entry> {
+    rt.manifest
+        .find_fft(n, precision, scheme)
+        .into_iter()
+        .find(|e| e.name.starts_with("serve_"))
+}
+
+/// GFLOPS (5 N log2 N accounting) from a measured result.
+pub fn gflops(r: &BenchResult) -> f64 {
+    r.throughput() / 1e9
+}
+
+/// Percent overhead of `b` relative to `a` (time-based).
+pub fn overhead_pct(a: &BenchResult, b: &BenchResult) -> f64 {
+    100.0 * (b.median_secs() - a.median_secs()) / a.median_secs()
+}
+
+/// Simple fixed-width table builder for the text reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn csv_rows(&self) -> (String, Vec<String>) {
+        (
+            self.header.join(","),
+            self.rows.iter().map(|r| r.join(",")).collect(),
+        )
+    }
+}
+
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn ms(secs: f64) -> String {
+    format!("{:.3}", secs * 1e3)
+}
+
+/// Verify a batch of outputs against the native rust FFT (sanity column).
+pub fn verify_against_native(x: &[C64], y: &[C64], n: usize) -> f64 {
+    let want = crate::signal::fft::fft_batched(x, n);
+    let scale = crate::signal::complex::max_abs(&want).max(1e-30);
+    crate::signal::complex::max_abs_diff(y, &want) / scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["N", "GFLOPS"]);
+        t.row(vec!["1024".into(), "12.5".into()]);
+        t.row(vec!["65536".into(), "3.1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("GFLOPS"));
+        let (h, rows) = t.csv_rows();
+        assert_eq!(h, "N,GFLOPS");
+        assert_eq!(rows.len(), 2);
+    }
+}

@@ -1,0 +1,95 @@
+//! Figs 10/11/17/18: performance of generated kernels across the size
+//! grid vs the roofline — FP32/FP64 on A100 (10/11) and T4 (17/18).
+//!
+//! The paper plots a 3D surface (size x batch x TFLOPS) against the
+//! hardware roofline; here the surface is reported as a table of modelled
+//! GPU GFLOPS + roofline fraction per (N, batch) point, with the measured
+//! CPU ratio against the XLA-FFT baseline as the hardware-independent
+//! sanity column (paper headline: 0.58% / 7.75% average overhead vs
+//! cuFFT on A100; 3.77% / 7.63% on T4).
+
+use anyhow::Result;
+
+use crate::perfmodel::{self, cost::FtScheme, gpu};
+use crate::plan;
+use crate::runtime::{Precision, Scheme};
+
+use super::common::{self, f1, f2, Table};
+use super::ReportCtx;
+
+pub fn run(ctx: &ReportCtx, gpu_name: &str, f64p: bool) -> Result<String> {
+    let gpu = gpu::by_name(gpu_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown GPU {gpu_name}"))?;
+    let prec = if f64p { Precision::F64 } else { Precision::F32 };
+    let plabel = if f64p { "FP64" } else { "FP32" };
+
+    let mut t = Table::new(&[
+        "N", "batch", "stages", "GFLOPS (modelled)", "roofline frac",
+        "CPU t/xla", "bound",
+    ]);
+    let mut ratios = Vec::new();
+    for n in ctx.rt.manifest.sizes() {
+        let Some(e) = common::throughput_entry(ctx.rt, n, prec, Scheme::NoFt) else {
+            continue;
+        };
+        let shape = perfmodel::KernelShape::from_plan(
+            e.n, e.batch, e.bs.min(e.batch), plan::stages_for(e.n), f64p,
+        );
+        let p = perfmodel::predict(&shape, FtScheme::None, &gpu);
+        // measured CPU ratio vs the xla baseline when available
+        let ratio = match common::throughput_entry(ctx.rt, n, prec, Scheme::XlaFft) {
+            Some(_) if ctx.skip_measure => "see A100 fig".to_string(),
+            Some(x) => {
+                let a = common::measure_entry(ctx.rt, e, &ctx.bench)?;
+                let b = common::measure_entry(ctx.rt, x, &ctx.bench)?;
+                let r = a.median_secs() / b.median_secs();
+                ratios.push(r);
+                f2(r)
+            }
+            None => "-".into(),
+        };
+        let bound = if p.mem_seconds >= p.compute_seconds.max(p.sfu_seconds) {
+            "mem"
+        } else if p.compute_seconds >= p.sfu_seconds {
+            "compute"
+        } else {
+            "sfu"
+        };
+        t.row(vec![
+            format!("2^{}", n.trailing_zeros()),
+            e.batch.to_string(),
+            shape.stages.to_string(),
+            f1(p.gflops),
+            f2(p.roofline_frac),
+            ratio,
+            bound.into(),
+        ]);
+    }
+    let mut out = format!(
+        "Figs 10/11/17/18 (reproduction): generated {plabel} kernels on {}\n\n",
+        gpu.name
+    );
+    out.push_str(&t.render());
+    if !ratios.is_empty() {
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        out.push_str(&format!(
+            "\nmean CPU turbo/xla time ratio: {mean:.2} (interpreter-inflated; \
+             trend column only)\n"
+        ));
+    }
+    out.push_str(&format!(
+        "roofline: {} {plabel} peak {:.1} TFLOPS, {:.0} GB/s\n",
+        gpu.name,
+        (if f64p { gpu.fp64_flops } else { gpu.fp32_flops }) / 1e12,
+        gpu.mem_bw / 1e9,
+    ));
+    if f64p && gpu.name == "T4" {
+        out.push_str(
+            "paper Fig 18 check: T4 FP64 must be compute-bound and stay \
+             under ~250 GFLOPS everywhere.\n",
+        );
+    }
+    let (h, rows) = t.csv_rows();
+    ctx.write_csv(&format!("fig_surface_{}_{plabel}", gpu.name), &h, &rows)?;
+    Ok(out)
+}

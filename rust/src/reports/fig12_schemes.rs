@@ -1,0 +1,108 @@
+//! Figs 12/13/19: the ABFT scheme ladder — one-sided vs thread-level vs
+//! threadblock-level two-sided checksum overhead.
+//!
+//! This is the paper's core claim: overhead drops monotonically
+//! one-sided -> thread -> block (A100 FP32: 29% -> 13.4% -> 8.9%;
+//! FP64: 27.4% -> 10.1% -> 7.9%; T4 FP32: 45.7% -> 25.9% -> 15.0%).
+//! Both the measured (PJRT-CPU) and modelled (GPU) ladders are reported.
+
+use anyhow::Result;
+
+use crate::perfmodel::{self, cost::FtScheme, gpu};
+use crate::plan;
+use crate::runtime::{Precision, Scheme};
+
+use super::common::{self, f1, Table};
+use super::ReportCtx;
+
+pub fn run(ctx: &ReportCtx, gpu_name: &str, f64p: bool) -> Result<String> {
+    let gpu = gpu::by_name(gpu_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown GPU {gpu_name}"))?;
+    let prec = if f64p { Precision::F64 } else { Precision::F32 };
+    let plabel = if f64p { "FP64" } else { "FP32" };
+
+    let mut meas = Table::new(&[
+        "N", "noft ms", "onesided %", "thread %", "block %",
+    ]);
+    let mut sums = [0.0f64; 3];
+    let mut counts = 0usize;
+    let sizes = if ctx.skip_measure { vec![] } else { ctx.rt.manifest.sizes() };
+    for n in sizes {
+        let base = common::throughput_entry(ctx.rt, n, prec, Scheme::NoFt);
+        let one = common::throughput_entry(ctx.rt, n, prec, Scheme::OneSided);
+        let thr = common::throughput_entry(ctx.rt, n, prec, Scheme::FtThread);
+        let blk = common::throughput_entry(ctx.rt, n, prec, Scheme::FtBlock);
+        let (Some(base), Some(one), Some(thr), Some(blk)) = (base, one, thr, blk)
+        else {
+            continue;
+        };
+        let b = common::measure_entry(ctx.rt, base, &ctx.bench)?;
+        let o = common::measure_entry(ctx.rt, one, &ctx.bench)?;
+        let t = common::measure_entry(ctx.rt, thr, &ctx.bench)?;
+        let k = common::measure_entry(ctx.rt, blk, &ctx.bench)?;
+        let (po, pt, pk) = (
+            common::overhead_pct(&b, &o),
+            common::overhead_pct(&b, &t),
+            common::overhead_pct(&b, &k),
+        );
+        sums[0] += po;
+        sums[1] += pt;
+        sums[2] += pk;
+        counts += 1;
+        meas.row(vec![
+            format!("2^{}", n.trailing_zeros()),
+            common::ms(b.median_secs()),
+            f1(po),
+            f1(pt),
+            f1(pk),
+        ]);
+    }
+
+    let mut out = format!(
+        "Figs 12/13/19 (reproduction): two-sided ABFT scheme ladder, \
+         {plabel} / {}\n\n[measured PJRT-CPU overhead vs no-FT TurboFFT]\n",
+        gpu.name
+    );
+    out.push_str(&meas.render());
+    if counts > 0 {
+        out.push_str(&format!(
+            "\nmean measured overhead: one-sided {:.1}%  thread {:.1}%  block {:.1}%\n",
+            sums[0] / counts as f64,
+            sums[1] / counts as f64,
+            sums[2] / counts as f64,
+        ));
+    }
+
+    // modelled GPU ladder at a representative large size
+    let mut model = Table::new(&["scheme", "modelled overhead %"]);
+    let n = 1usize << 18;
+    let shape = perfmodel::KernelShape::from_plan(
+        n, (1 << 24) / n, 16, plan::stages_for(n), f64p,
+    );
+    for (name, s) in [
+        ("offline (Pilla)", FtScheme::Offline),
+        ("one-sided (Xin)", FtScheme::OneSided),
+        ("two-sided thread", FtScheme::TwoSidedThread),
+        ("two-sided block (TurboFFT)", FtScheme::TwoSidedBlock),
+    ] {
+        model.row(vec![
+            name.into(),
+            f1(perfmodel::cost::overhead_pct(&shape, s, &gpu)),
+        ]);
+    }
+    out.push_str(&format!("\n[modelled {} @ N=2^18]\n", gpu.name));
+    out.push_str(&model.render());
+    out.push_str(
+        "\nshape check (paper): modelled overhead strictly decreases left to \
+         right; block-level lands under ~15%. NOTE on the measured rows: \
+         interpret-mode CPU wall-clock has a +/-20% XLA-fusion/noise band — \
+         single-digit GPU overheads are below this substrate's resolution \
+         (DESIGN.md §1). The *measured* two-sided-vs-one-sided separation \
+         this paper claims shows up where the schemes differ structurally: \
+         under live error injection (Figs 16/21), where one-sided pays \
+         full recomputes and two-sided pays batched corrections.\n",
+    );
+    let (h, rows) = meas.csv_rows();
+    ctx.write_csv(&format!("fig_schemes_{}_{plabel}", gpu.name), &h, &rows)?;
+    Ok(out)
+}

@@ -1,0 +1,164 @@
+//! Figs 14/20: end-to-end comparison with and without fault tolerance
+//! (TurboFFT, TurboFFT+two-sided checksum, cuFFT-standin, VkFFT-standin)
+//! at a fixed total element count, plus the full serving-path run through
+//! the coordinator (batcher -> device -> fault manager).
+//!
+//! Paper headline: two-sided checksums cost ~8% (FP32) / ~10% (FP64) over
+//! TurboFFT-no-FT on A100, ~14% on T4 — i.e. FT at about the price other
+//! libraries pay just to trail cuFFT.
+
+use anyhow::Result;
+
+use crate::coordinator::{Config, Coordinator, FtStatus};
+use crate::perfmodel::{self, cost::FtScheme, gpu};
+use crate::plan;
+use crate::runtime::{Precision, Scheme};
+use crate::util::rng::Rng;
+use crate::workload::signals;
+
+use super::common::{self, f1, f2, Table};
+use super::ReportCtx;
+
+pub fn run(ctx: &ReportCtx, gpu_name: &str) -> Result<String> {
+    let gpu = gpu::by_name(gpu_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown GPU {gpu_name}"))?;
+    let mut out = format!(
+        "Figs 14/20 (reproduction): e2e with/without FT ({})\n",
+        gpu.name
+    );
+
+    for (prec, plabel) in [(Precision::F32, "FP32"), (Precision::F64, "FP64")] {
+        let mut t = Table::new(&[
+            "N", "noft GF", "ft_block GF", "ft ovh %", "xla GF", "vk GF",
+            "modelled ft ovh %",
+        ]);
+        let mut rows = 0;
+        let sizes = if ctx.skip_measure { vec![] } else { ctx.rt.manifest.sizes() };
+        for n in sizes {
+            let base = common::throughput_entry(ctx.rt, n, prec, Scheme::NoFt);
+            let ft = common::throughput_entry(ctx.rt, n, prec, Scheme::FtBlock);
+            let (Some(base), Some(ft)) = (base, ft) else { continue };
+            let b = common::measure_entry(ctx.rt, base, &ctx.bench)?;
+            let f = common::measure_entry(ctx.rt, ft, &ctx.bench)?;
+            let xla = match common::throughput_entry(ctx.rt, n, prec, Scheme::XlaFft) {
+                Some(e) => f1(common::gflops(&common::measure_entry(ctx.rt, e, &ctx.bench)?)),
+                None => "-".into(),
+            };
+            let vk = match common::throughput_entry(ctx.rt, n, prec, Scheme::VkLike) {
+                Some(e) => f1(common::gflops(&common::measure_entry(ctx.rt, e, &ctx.bench)?)),
+                None => "-".into(),
+            };
+            let shape = perfmodel::KernelShape::from_plan(
+                n, base.batch, base.bs.min(base.batch),
+                plan::stages_for(n), prec == Precision::F64,
+            );
+            let modelled = perfmodel::cost::overhead_pct(
+                &shape, FtScheme::TwoSidedBlock, &gpu,
+            );
+            t.row(vec![
+                format!("2^{}", n.trailing_zeros()),
+                f1(common::gflops(&b)),
+                f1(common::gflops(&f)),
+                f1(common::overhead_pct(&b, &f)),
+                xla,
+                vk,
+                f1(modelled),
+            ]);
+            rows += 1;
+        }
+        if rows > 0 {
+            out.push_str(&format!("\n[{plabel}: measured CPU GFLOPS + modelled overhead]\n"));
+            out.push_str(&t.render());
+            let (h, csv) = t.csv_rows();
+            ctx.write_csv(&format!("fig_e2e_{}_{plabel}", gpu.name), &h, &csv)?;
+        }
+    }
+
+    // ---- serving path through the coordinator ---------------------------
+    if ctx.skip_measure {
+        out.push_str("\n[measured columns identical to fig14 (hardware-\
+                      independent); modelled T4 overheads:]\n");
+        out.push_str(&modelled_only(ctx, &gpu));
+    } else {
+        out.push_str("\n[serving path: coordinator throughput, N=1024 FP32]\n");
+        out.push_str(&serving_section(ctx)?);
+    }
+    Ok(out)
+}
+
+fn modelled_only(ctx: &ReportCtx, gpu: &gpu::GpuSpec) -> String {
+    let mut t = Table::new(&["N", "modelled ft ovh %"]);
+    for n in ctx.rt.manifest.sizes() {
+        let shape = perfmodel::KernelShape::from_plan(
+            n, ((1usize << 20) / n).max(1), 16, plan::stages_for(n), false,
+        );
+        t.row(vec![
+            format!("2^{}", n.trailing_zeros()),
+            f1(perfmodel::cost::overhead_pct(&shape, FtScheme::TwoSidedBlock, gpu)),
+        ]);
+    }
+    t.render()
+}
+
+fn serving_section(ctx: &ReportCtx) -> Result<String> {
+    let n = 1024;
+    let requests = if ctx.trials >= 2000 { 512 } else { 128 };
+    let mut t = Table::new(&["scheme", "req/s", "p50 ms", "p99 ms", "verified", "notes"]);
+    for scheme in [Scheme::NoFt, Scheme::FtBlock] {
+        let cfg = Config {
+            scheme,
+            policy: crate::coordinator::BatchPolicy {
+                target_batch: 16,
+                max_delay: std::time::Duration::from_millis(1),
+            },
+            ..Default::default()
+        };
+        let coord = match Coordinator::new(ctx.rt, cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                t.row(vec![
+                    scheme.to_string(), "-".into(), "-".into(), "-".into(),
+                    "-".into(), format!("unavailable: {e}"),
+                ]);
+                continue;
+            }
+        };
+        let mut rng = Rng::new(0x5EED);
+        // warm the serve plan (compile outside the timing window)
+        let mut warm = Vec::new();
+        for _ in 0..16 {
+            warm.push(coord.submit(Precision::F32, signals::gaussian_batch(&mut rng, 1, n)));
+        }
+        for rx in warm {
+            let _ = rx.recv();
+        }
+        coord.quiesce();
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let sig = signals::gaussian_batch(&mut rng, 1, n);
+            rxs.push(coord.submit(Precision::F32, sig));
+        }
+        let mut verified = 0usize;
+        let mut ok = 0usize;
+        for rx in rxs {
+            if let Ok(Ok(resp)) = rx.recv() {
+                ok += 1;
+                if resp.ft == FtStatus::Verified {
+                    verified += 1;
+                }
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let lat = coord.metrics.latency_summary();
+        t.row(vec![
+            scheme.to_string(),
+            f2(ok as f64 / elapsed),
+            f2(lat.percentile(50.0) * 1e3),
+            f2(lat.percentile(99.0) * 1e3),
+            format!("{verified}/{ok}"),
+            format!("batches={}", coord.metrics.batches.load(std::sync::atomic::Ordering::Relaxed)),
+        ]);
+    }
+    Ok(t.render())
+}

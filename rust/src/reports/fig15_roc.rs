@@ -1,0 +1,136 @@
+//! Fig 15: error-injection analysis — ROC curve and detection/false-alarm
+//! rates vs the fault threshold delta.
+//!
+//! Reproduces the paper's §V-C protocol end to end: random gaussian test
+//! signals, single bit flips injected *inside* the lowered kernels in half
+//! the trials, residuals thresholded at L3. The paper's claim: a delta
+//! exists with high detection and negligible false alarms.
+
+use anyhow::Result;
+
+use crate::faults::{roc, Campaign, CampaignConfig};
+use crate::runtime::{Precision, Scheme};
+
+use super::common::{f3, Table};
+use super::ReportCtx;
+
+pub fn run(ctx: &ReportCtx) -> Result<String> {
+    let mut out = String::from("Fig 15 (reproduction): error injection analysis\n");
+    for (prec, plabel) in [(Precision::F32, "FP32"), (Precision::F64, "FP64")] {
+        // prefer the small serving artifact: one trial = one execution
+        let entry = super::common::serving_entry(ctx.rt, 1024, prec, Scheme::FtBlock)
+            .or_else(|| super::common::throughput_entry(ctx.rt, 256, prec, Scheme::FtBlock))
+            .or_else(|| super::common::throughput_entry(ctx.rt, 64, prec, Scheme::FtBlock));
+        let Some(entry) = entry else {
+            out.push_str(&format!("[{plabel}] no ft_block artifact available\n"));
+            continue;
+        };
+        let handle = ctx.rt.handle();
+        handle.warmup(&entry.name)?;
+        let campaign = Campaign {
+            device: &handle,
+            entry,
+            cfg: CampaignConfig {
+                trials: ctx.trials,
+                ..Default::default()
+            },
+        };
+        let outcome = campaign.run()?;
+        // Turmon-style split: mantissa-tail flips that do not perturb the
+        // output beyond roundoff are both undetectable and harmless; the
+        // ROC that matters sweeps over SIGNIFICANT faults + clean runs.
+        let samples = outcome.labeled_significant_residuals();
+        let all_samples = outcome.labeled_residuals();
+        let curve = roc::roc_curve(&samples, 24);
+        let auc = roc::auc(&curve);
+        let auc_all = roc::auc(&roc::roc_curve(&all_samples, 24));
+        let delta_star = roc::calibrate_delta(&samples, 0.0);
+
+        let mut t = Table::new(&["delta", "detection", "false alarm"]);
+        for p in curve.iter().step_by(2) {
+            t.row(vec![
+                format!("{:.2e}", p.delta),
+                f3(p.detection_rate),
+                f3(p.false_alarm_rate),
+            ]);
+        }
+        out.push_str(&format!(
+            "\n[{plabel}: {} trials on {}, {} injected]\n",
+            outcome.records.len(),
+            entry.name,
+            outcome.records.iter().filter(|r| r.injected).count()
+        ));
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "\nAUC {auc:.4} over significant faults ({} of {} injections \
+             perturbed the output beyond roundoff; AUC {auc_all:.4} counting \
+             harmless mantissa-tail flips); zero-false-alarm delta* = \
+             {delta_star:.2e}\nat campaign delta: detection {:.1}% overall, \
+             {:.1}% of significant faults; false alarms {:.1}%; located \
+             correctly {:.1}% of detections\n",
+            outcome.significant_count(),
+            outcome.records.iter().filter(|r| r.injected).count(),
+            100.0 * outcome.detection_rate(),
+            100.0 * outcome.significant_detection_rate(),
+            100.0 * outcome.false_alarm_rate(),
+            100.0 * outcome.location_accuracy(),
+        ));
+        // detection by bit class: composite (batched) detection resolves
+        // exponent/sign flips essentially always; deep-mantissa flips sit
+        // below the sqrt(N)-scaled residual floor AND below roundoff harm
+        let mut cls = Table::new(&["bit class", "injected", "significant",
+                                   "detected", "det% of significant"]);
+        let classes: [(&str, std::ops::Range<u8>); 3] = if prec == Precision::F32 {
+            [("sign+exponent (23-31)", 23..32),
+             ("high mantissa (12-22)", 12..23),
+             ("low mantissa (0-11)", 0..12)]
+        } else {
+            [("sign+exponent (52-63)", 52..64),
+             ("high mantissa (26-51)", 26..52),
+             ("low mantissa (0-25)", 0..26)]
+        };
+        for (label, range) in classes {
+            let inj: Vec<_> = outcome.records.iter()
+                .filter(|r| r.injected && range.contains(&r.bit)).collect();
+            let sig = inj.iter().filter(|r| r.significant).count();
+            let det_sig = inj.iter()
+                .filter(|r| r.significant && r.detected).count();
+            let det = inj.iter().filter(|r| r.detected).count();
+            cls.row(vec![
+                label.into(),
+                inj.len().to_string(),
+                sig.to_string(),
+                det.to_string(),
+                if sig > 0 {
+                    format!("{:.1}", 100.0 * det_sig as f64 / sig as f64)
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+        out.push_str("\n");
+        out.push_str(&cls.render());
+        // undetected faults must be numerically negligible by construction
+        let max_missed = outcome
+            .records
+            .iter()
+            .filter(|r| r.injected && !r.detected)
+            .map(|r| r.residual)
+            .fold(0.0f64, f64::max);
+        out.push_str(&format!(
+            "largest undetected-fault residual: {max_missed:.2e} \
+             (mantissa-tail flips below roundoff)\n",
+        ));
+        let rows: Vec<String> = curve
+            .iter()
+            .map(|p| format!("{},{},{}", p.delta, p.detection_rate, p.false_alarm_rate))
+            .collect();
+        ctx.write_csv(&format!("fig15_{plabel}"), "delta,detection,false_alarm", &rows)?;
+    }
+    out.push_str(
+        "\nshape check (paper Fig 15): ROC hugs the top-left corner; a \
+         threshold band exists with ~100% detection of significant flips \
+         and ~0% false alarms.\n",
+    );
+    Ok(out)
+}

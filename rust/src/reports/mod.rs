@@ -1,0 +1,105 @@
+//! Figure/table regenerators: one function per table and figure of the
+//! paper's evaluation section (DESIGN.md §5 experiment index).
+//!
+//! Every report combines (a) **measured** wall-clock on the PJRT-CPU
+//! backend — the source of truth for all ratios/overheads — and (b)
+//! **modelled** A100/T4 numbers from `perfmodel` for the absolute GFLOPS
+//! surfaces the paper plots. Modelled columns are always labelled.
+
+pub mod common;
+pub mod fig10_surface;
+pub mod fig12_schemes;
+pub mod fig14_e2e;
+pub mod fig15_roc;
+pub mod fig16_inject;
+pub mod fig8_stepwise;
+pub mod fig9_batched;
+pub mod table1;
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::util::bench::BenchConfig;
+
+/// Shared context for the report generators.
+pub struct ReportCtx<'a> {
+    pub rt: &'a Runtime,
+    pub bench: BenchConfig,
+    /// trial count for campaign-driven figures (fig15/16)
+    pub trials: usize,
+    /// also write CSV rows under bench_results/
+    pub csv: bool,
+    /// skip wall-clock measurements (T4 duplicates reuse A100 figures)
+    pub skip_measure: bool,
+}
+
+impl<'a> ReportCtx<'a> {
+    pub fn new(rt: &'a Runtime, quick: bool) -> Self {
+        ReportCtx {
+            rt,
+            bench: if quick { BenchConfig::quick() } else { BenchConfig::default() },
+            trials: if quick { 200 } else { 2000 },
+            csv: true,
+            skip_measure: false,
+        }
+    }
+
+    /// A copy that skips wall-clock measurement (modelled columns only).
+    pub fn without_measure(&self) -> ReportCtx<'a> {
+        ReportCtx {
+            rt: self.rt,
+            bench: self.bench.clone(),
+            trials: self.trials,
+            csv: self.csv,
+            skip_measure: true,
+        }
+    }
+
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<()> {
+        if !self.csv {
+            return Ok(());
+        }
+        std::fs::create_dir_all("bench_results")?;
+        let mut out = String::with_capacity(rows.len() * 64);
+        out.push_str(header);
+        out.push('\n');
+        for r in rows {
+            out.push_str(r);
+            out.push('\n');
+        }
+        std::fs::write(format!("bench_results/{name}.csv"), out)?;
+        Ok(())
+    }
+}
+
+/// All known figure ids, in paper order.
+pub const ALL_FIGURES: &[&str] = &[
+    "table1", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21",
+];
+
+/// Dispatch a figure id to its generator; returns the printed report.
+pub fn run_figure(ctx: &ReportCtx, id: &str) -> Result<String> {
+    match id {
+        "table1" => table1::run(ctx),
+        "fig8" => fig8_stepwise::run(ctx),
+        "fig9" => fig9_batched::run(ctx),
+        "fig10" => fig10_surface::run(ctx, "A100", false),
+        "fig11" => fig10_surface::run(ctx, "A100", true),
+        "fig12" => fig12_schemes::run(ctx, "A100", false),
+        "fig13" => fig12_schemes::run(ctx, "A100", true),
+        "fig14" => fig14_e2e::run(ctx, "A100"),
+        "fig15" => fig15_roc::run(ctx),
+        "fig16" => fig16_inject::run(ctx, "A100"),
+        // T4 variants: measured (CPU) columns are hardware-independent and
+        // identical to the A100 figures; only the modelled columns change.
+        // Skip the duplicate measurements (ctx.measure_off) to keep the
+        // full run inside time/memory budgets.
+        "fig17" => fig10_surface::run(&ctx.without_measure(), "T4", false),
+        "fig18" => fig10_surface::run(&ctx.without_measure(), "T4", true),
+        "fig19" => fig12_schemes::run(&ctx.without_measure(), "T4", false),
+        "fig20" => fig14_e2e::run(&ctx.without_measure(), "T4"),
+        "fig21" => fig16_inject::run(ctx, "T4"),
+        other => anyhow::bail!("unknown figure id {other:?} (try: {:?})", ALL_FIGURES),
+    }
+}

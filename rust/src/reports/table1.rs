@@ -1,0 +1,51 @@
+//! Table I: kernel parameter setup per FFT size (plan table + manifest
+//! cross-check).
+
+use anyhow::Result;
+
+use crate::plan;
+
+use super::{common::Table, ReportCtx};
+
+pub fn run(ctx: &ReportCtx) -> Result<String> {
+    let mut t = Table::new(&["N", "stages", "factors", "bs", "split_radix", "base_max"]);
+    for p in plan::table1() {
+        t.row(vec![
+            format!("2^{}", p.n.trailing_zeros()),
+            p.stages.to_string(),
+            format!("{:?}", p.factors),
+            p.bs.to_string(),
+            p.split_radix.to_string(),
+            p.base_max.to_string(),
+        ]);
+    }
+    let mut out = String::from(
+        "Table I (reproduction): TurboFFT kernel parameter setup\n\
+         (scaled regimes: 1 launch <= 2^12, 2 <= 2^16, 3 above; DESIGN.md §1)\n\n",
+    );
+    out.push_str(&t.render());
+
+    // cross-check the python code generator agreed (via the manifest)
+    out.push_str("\nmanifest cross-check:\n");
+    let mut ok = 0;
+    let mut bad = 0;
+    for e in &ctx.rt.manifest.entries {
+        if e.op != crate::runtime::Op::Fft || e.scheme != crate::runtime::Scheme::NoFt {
+            continue;
+        }
+        let want = plan::factors_for(e.n);
+        if want == e.factors {
+            ok += 1;
+        } else {
+            bad += 1;
+            out.push_str(&format!(
+                "  MISMATCH {}: manifest {:?} vs plan {:?}\n",
+                e.name, e.factors, want
+            ));
+        }
+    }
+    out.push_str(&format!("  {ok} entries agree, {bad} mismatch\n"));
+    let (h, rows) = t.csv_rows();
+    ctx.write_csv("table1", &h, &rows)?;
+    Ok(out)
+}

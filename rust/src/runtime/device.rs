@@ -1,0 +1,268 @@
+//! The device thread: single owner of the PJRT client and executable cache.
+//!
+//! PJRT wrapper types hold raw pointers (!Send), so — as in real serving
+//! stacks where one worker owns one accelerator — a dedicated thread owns
+//! the `PjRtClient`, compiles artifacts lazily (once each, cached), and
+//! executes requests arriving over a channel. `DeviceHandle` is the
+//! cloneable, thread-safe face the coordinator uses.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// One execution request to the device thread.
+struct ExecRequest {
+    entry_name: String,
+    inputs: Vec<HostTensor>,
+    reply: mpsc::Sender<Result<ExecResponse>>,
+}
+
+/// Execution result plus device-side timing.
+pub struct ExecResponse {
+    pub outputs: Vec<HostTensor>,
+    /// pure execute+transfer time on the device thread
+    pub device_time: std::time::Duration,
+    /// true when this call compiled the executable (cold start)
+    pub compiled: bool,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    /// pre-compile an artifact (warmup), reply when done
+    Warm(String, mpsc::Sender<Result<()>>),
+    Stats(mpsc::Sender<DeviceStats>),
+    Shutdown,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    pub executions: u64,
+    pub compilations: u64,
+    pub exec_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+/// Cloneable handle to the device thread.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+pub struct Device {
+    handle: DeviceHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Device {
+    /// Spawn the device thread for the artifacts in `manifest`.
+    pub fn spawn(manifest: Arc<Manifest>) -> Result<Device> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("turbofft-device".into())
+            .spawn(move || device_main(manifest, rx, ready_tx))
+            .context("spawning device thread")?;
+        // surface client-creation errors synchronously
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("device thread died during startup"))??;
+        Ok(Device { handle: DeviceHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Device {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl DeviceHandle {
+    /// Execute an artifact synchronously (blocks until the device thread
+    /// replies). Returns outputs in manifest order.
+    pub fn execute(
+        &self,
+        entry_name: &str,
+        inputs: Vec<HostTensor>,
+    ) -> Result<ExecResponse> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest {
+                entry_name: entry_name.to_string(),
+                inputs,
+                reply,
+            }))
+            .map_err(|_| anyhow!("device thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped the request"))?
+    }
+
+    /// Compile ahead of time so the first request doesn't pay the JIT.
+    pub fn warmup(&self, entry_name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Warm(entry_name.to_string(), reply))
+            .map_err(|_| anyhow!("device thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped the request"))?
+    }
+
+    pub fn stats(&self) -> Result<DeviceStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Stats(reply))
+            .map_err(|_| anyhow!("device thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped the request"))
+    }
+}
+
+/// Executable-cache capacity: XLA CPU executables carry constant-folded
+/// twiddle tables (MBs for the large-N f64 variants); an LRU cap keeps
+/// long figure runs inside memory budgets.
+const EXE_CACHE_CAP: usize = 48;
+
+struct DeviceState {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    lru: Vec<String>,
+    stats: DeviceStats,
+}
+
+impl DeviceState {
+    fn touch(&mut self, name: &str) {
+        if let Some(pos) = self.lru.iter().position(|n| n == name) {
+            self.lru.remove(pos);
+        }
+        self.lru.push(name.to_string());
+    }
+
+    fn compile_if_needed(&mut self, name: &str) -> Result<bool> {
+        if self.cache.contains_key(name) {
+            self.touch(name);
+            return Ok(false);
+        }
+        let entry = self.manifest.get(name)?;
+        let path: PathBuf = self.manifest.hlo_path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.stats.compilations += 1;
+        self.stats.compile_seconds += t0.elapsed().as_secs_f64();
+        self.cache.insert(name.to_string(), exe);
+        self.touch(name);
+        while self.cache.len() > EXE_CACHE_CAP {
+            let evict = self.lru.remove(0);
+            self.cache.remove(&evict);
+        }
+        Ok(true)
+    }
+
+    fn execute(&mut self, req: &ExecRequest) -> Result<ExecResponse> {
+        let compiled = self.compile_if_needed(&req.entry_name)?;
+        let entry = self.manifest.get(&req.entry_name)?;
+        if req.inputs.len() != entry.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                req.inputs.len()
+            ));
+        }
+        for (i, (t, spec)) in req.inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                return Err(anyhow!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    entry.name,
+                    t.shape(),
+                    spec.shape
+                ));
+            }
+            if t.dtype_str() != spec.dtype {
+                return Err(anyhow!(
+                    "{}: input {i} dtype {} != manifest {}",
+                    entry.name,
+                    t.dtype_str(),
+                    spec.dtype
+                ));
+            }
+        }
+        let exe = self.cache.get(&req.entry_name).expect("cached above");
+        let t0 = Instant::now();
+        let literals = req
+            .inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True: always a single tuple result
+        let parts = tuple.to_tuple()?;
+        let outputs = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let device_time = t0.elapsed();
+        self.stats.executions += 1;
+        self.stats.exec_seconds += device_time.as_secs_f64();
+        Ok(ExecResponse { outputs, device_time, compiled })
+    }
+}
+
+fn device_main(
+    manifest: Arc<Manifest>,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    let mut st = DeviceState {
+        client,
+        manifest,
+        cache: HashMap::new(),
+        lru: Vec::new(),
+        stats: DeviceStats::default(),
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Exec(req) => {
+                let resp = st.execute(&req);
+                let _ = req.reply.send(resp);
+            }
+            Msg::Warm(name, reply) => {
+                let _ = reply.send(st.compile_if_needed(&name).map(|_| ()));
+            }
+            Msg::Stats(reply) => {
+                let _ = reply.send(st.stats.clone());
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}

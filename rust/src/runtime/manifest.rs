@@ -1,0 +1,354 @@
+//! The artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime (parsed with the in-tree JSON substrate).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    F64,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "f64" => Ok(Precision::F64),
+            other => bail!("unknown precision {other:?}"),
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Fft,
+    Correct,
+    Checksum,
+}
+
+impl Op {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fft" => Ok(Op::Fft),
+            "correct" => Ok(Op::Correct),
+            "checksum" => Ok(Op::Checksum),
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+}
+
+/// Checksum scheme of an FFT artifact (paper's design ladder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    NoFt,
+    OneSided,
+    FtThread,
+    FtBlock,
+    VkLike,
+    XlaFft,
+    NaiveV0,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "noft" => Ok(Scheme::NoFt),
+            "onesided" => Ok(Scheme::OneSided),
+            "ft_thread" => Ok(Scheme::FtThread),
+            "ft_block" => Ok(Scheme::FtBlock),
+            "vklike" => Ok(Scheme::VkLike),
+            "xlafft" => Ok(Scheme::XlaFft),
+            "naive_v0" => Ok(Scheme::NaiveV0),
+            other => bail!("unknown scheme {other:?}"),
+        }
+    }
+
+    /// Does the executable take the injection-descriptor operand?
+    pub fn takes_descriptor(&self) -> bool {
+        matches!(self, Scheme::OneSided | Scheme::FtThread | Scheme::FtBlock)
+    }
+
+    /// Does the scheme support additive (delayed batched) correction?
+    pub fn correctable(&self) -> bool {
+        matches!(self, Scheme::FtThread | Scheme::FtBlock)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scheme::NoFt => "noft",
+            Scheme::OneSided => "onesided",
+            Scheme::FtThread => "ft_thread",
+            Scheme::FtBlock => "ft_block",
+            Scheme::VkLike => "vklike",
+            Scheme::XlaFft => "xlafft",
+            Scheme::NaiveV0 => "naive_v0",
+        }
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub op: Op,
+    pub scheme: Scheme,
+    pub n: usize,
+    pub precision: Precision,
+    pub batch: usize,
+    pub bs: usize,
+    pub tiles: usize,
+    pub factors: Vec<usize>,
+    pub stages: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl Entry {
+    fn parse(v: &Json) -> Result<Self> {
+        let gs = |k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing {k}"))?
+                .to_string())
+        };
+        let gu = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("entry missing {k}"))
+        };
+        let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry missing {k}"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect()
+        };
+        Ok(Entry {
+            name: gs("name")?,
+            file: gs("file")?,
+            op: Op::parse(&gs("op")?)?,
+            scheme: Scheme::parse(&gs("scheme")?)?,
+            n: gu("n")?,
+            precision: Precision::parse(&gs("precision")?)?,
+            batch: gu("batch")?,
+            bs: gu("bs")?,
+            tiles: gu("tiles")?,
+            factors: v
+                .get("factors")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("entry missing factors"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad factor")))
+                .collect::<Result<Vec<_>>>()?,
+            stages: gu("stages")?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+
+    /// Meta/psig vector length conventions (see fused_ft.py).
+    pub const META_LEN: usize = 8;
+    pub const PSIG_LEN: usize = 4;
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub profile: String,
+    pub correction_k: usize,
+    pub max_tile_n: usize,
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(Entry::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let by_name = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Ok(Manifest {
+            version: v.get("version").and_then(Json::as_usize).unwrap_or(0),
+            profile: v
+                .get("profile")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            correction_k: v
+                .get("correction_k")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing correction_k"))?,
+            max_tile_n: v.get("max_tile_n").and_then(Json::as_usize).unwrap_or(4096),
+            dir: dir.to_path_buf(),
+            entries,
+            by_name,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.entries[i])
+            .ok_or_else(|| anyhow!("no artifact named {name:?} in manifest"))
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// All FFT entries matching a predicate (router building block).
+    pub fn find_fft(
+        &self,
+        n: usize,
+        precision: Precision,
+        scheme: Scheme,
+    ) -> Vec<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.op == Op::Fft && e.n == n && e.precision == precision && e.scheme == scheme
+            })
+            .collect()
+    }
+
+    /// The correction executable for (n, precision), if emitted.
+    pub fn find_correction(&self, n: usize, precision: Precision) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.op == Op::Correct && e.n == n && e.precision == precision)
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.op == Op::Fft)
+            .map(|e| e.n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "profile": "test", "correction_k": 4, "max_tile_n": 4096,
+      "entries": [
+        {"name": "fft_noft_n256_b64_f32", "file": "a.hlo.txt", "op": "fft",
+         "scheme": "noft", "n": 256, "precision": "f32", "batch": 64,
+         "bs": 16, "tiles": 4, "factors": [256], "stages": 1,
+         "split_radix": 8, "base_max": 32,
+         "inputs": [{"shape": [64, 256, 2], "dtype": "float32"}],
+         "outputs": [{"shape": [64, 256, 2], "dtype": "float32"}]},
+        {"name": "correct_n256_f32", "file": "c.hlo.txt", "op": "correct",
+         "scheme": "noft", "n": 256, "precision": "f32", "batch": 64,
+         "bs": 16, "tiles": 4, "factors": [256], "stages": 1,
+         "split_radix": 8, "base_max": 32,
+         "inputs": [{"shape": [4, 256, 2], "dtype": "float32"},
+                    {"shape": [4, 256, 2], "dtype": "float32"}],
+         "outputs": [{"shape": [4, 256, 2], "dtype": "float32"}]}
+      ]}"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("fft_noft_n256_b64_f32").unwrap();
+        assert_eq!(e.n, 256);
+        assert_eq!(e.scheme, Scheme::NoFt);
+        assert!(!e.scheme.takes_descriptor());
+        assert_eq!(e.inputs[0].elements(), 64 * 256 * 2);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn finders() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.find_fft(256, Precision::F32, Scheme::NoFt).len(), 1);
+        assert_eq!(m.find_fft(256, Precision::F64, Scheme::NoFt).len(), 0);
+        assert!(m.find_correction(256, Precision::F32).is_some());
+        assert!(m.find_correction(512, Precision::F32).is_none());
+        assert_eq!(m.sizes(), vec![256]);
+    }
+
+    #[test]
+    fn scheme_properties() {
+        assert!(Scheme::FtBlock.takes_descriptor());
+        assert!(Scheme::FtBlock.correctable());
+        assert!(Scheme::OneSided.takes_descriptor());
+        assert!(!Scheme::OneSided.correctable());
+        assert!(!Scheme::XlaFft.takes_descriptor());
+    }
+}

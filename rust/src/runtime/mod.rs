@@ -1,0 +1,47 @@
+//! The PJRT runtime: artifact manifest, host tensors, and the device
+//! thread that loads `artifacts/*.hlo.txt` and executes them
+//! (`HloModuleProto::from_text_file` -> `compile` -> `execute`).
+
+pub mod device;
+pub mod manifest;
+pub mod tensor;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use device::{Device, DeviceHandle, DeviceStats, ExecResponse};
+pub use manifest::{Entry, Manifest, Op, Precision, Scheme};
+pub use tensor::{HostTensor, InjectionDescriptor};
+
+/// Facade owning the manifest + device thread.
+pub struct Runtime {
+    pub manifest: Arc<Manifest>,
+    device: Device,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and spawn the device thread.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        let device = Device::spawn(manifest.clone())?;
+        Ok(Runtime { manifest, device })
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        self.device.handle()
+    }
+
+    /// Execute by artifact name (convenience for tests/examples).
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> Result<ExecResponse> {
+        self.device.handle().execute(name, inputs)
+    }
+
+    /// Default artifacts directory: $TURBOFFT_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("TURBOFFT_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+    }
+}

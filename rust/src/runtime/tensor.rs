@@ -1,0 +1,207 @@
+//! Host tensors and their conversion to/from `xla::Literal`.
+//!
+//! Complex data crosses this boundary as interleaved real arrays
+//! [..., 2]; the coordinator's `C64` host buffers are packed to the
+//! artifact's precision here (DESIGN.md §6).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::signal::complex::{self, C64};
+
+/// A host-side tensor in one of the boundary dtypes.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    F64 { shape: Vec<usize>, data: Vec<f64> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. }
+            | HostTensor::F64 { shape, .. }
+            | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::F64 { .. } => "float64",
+            HostTensor::I32 { .. } => "int32",
+        }
+    }
+
+    /// Pack complex signals into an interleaved tensor of `shape` + [2].
+    pub fn from_complex(x: &[C64], mut shape: Vec<usize>, f64p: bool) -> Self {
+        let lead: usize = shape.iter().product();
+        assert_eq!(lead, x.len(), "shape/product mismatch");
+        shape.push(2);
+        if f64p {
+            HostTensor::F64 { shape, data: complex::pack_f64(x) }
+        } else {
+            HostTensor::F32 { shape, data: complex::pack_f32(x) }
+        }
+    }
+
+    /// Interpret an interleaved [..., 2] tensor as complex values.
+    pub fn to_complex(&self) -> Result<Vec<C64>> {
+        match self {
+            HostTensor::F32 { shape, data } => {
+                ensure_pair(shape)?;
+                Ok(complex::unpack_f32(data))
+            }
+            HostTensor::F64 { shape, data } => {
+                ensure_pair(shape)?;
+                Ok(complex::unpack_f64(data))
+            }
+            HostTensor::I32 { .. } => bail!("int tensor is not complex"),
+        }
+    }
+
+    /// View as f64 regardless of stored precision (for meta vectors).
+    pub fn to_f64_vec(&self) -> Result<Vec<f64>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data.iter().map(|&v| v as f64).collect()),
+            HostTensor::F64 { data, .. } => Ok(data.clone()),
+            HostTensor::I32 { .. } => bail!("int tensor"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::F64 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::F64 => Ok(HostTensor::F64 {
+                shape: dims,
+                data: lit.to_vec::<f64>()?,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => Err(anyhow!("unsupported literal element type {other:?}")),
+        }
+    }
+}
+
+fn ensure_pair(shape: &[usize]) -> Result<()> {
+    if shape.last() != Some(&2) {
+        bail!("expected interleaved complex tensor [..., 2], got {shape:?}");
+    }
+    Ok(())
+}
+
+/// The injection descriptor operand (must match kernels/inject.py).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InjectionDescriptor {
+    pub enabled: bool,
+    pub tile: usize,
+    pub signal: usize,
+    pub element: usize,
+    /// 0 = input side (pre-FFT, post-encode), 1 = output side
+    pub stage: u8,
+    pub bit: u8,
+    /// 0 = re word, 1 = im word
+    pub word: u8,
+}
+
+impl InjectionDescriptor {
+    pub const NONE: InjectionDescriptor = InjectionDescriptor {
+        enabled: false,
+        tile: 0,
+        signal: 0,
+        element: 0,
+        stage: 0,
+        bit: 0,
+        word: 0,
+    };
+
+    pub fn to_tensor(self) -> HostTensor {
+        HostTensor::I32 {
+            shape: vec![8],
+            data: vec![
+                self.enabled as i32,
+                self.tile as i32,
+                self.signal as i32,
+                self.element as i32,
+                self.stage as i32,
+                self.bit as i32,
+                self.word as i32,
+                0,
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_pack_shapes() {
+        let x = vec![C64::new(1.0, 2.0); 12];
+        let t = HostTensor::from_complex(&x, vec![3, 4], false);
+        assert_eq!(t.shape(), &[3, 4, 2]);
+        assert_eq!(t.elements(), 24);
+        let back = t.to_complex().unwrap();
+        assert_eq!(back.len(), 12);
+        assert_eq!(back[0], C64::new(1.0, 2.0));
+    }
+
+    #[test]
+    fn f64_precision_preserved() {
+        let x = vec![C64::new(1.0 + 1e-12, -3.0)];
+        let t = HostTensor::from_complex(&x, vec![1], true);
+        assert_eq!(t.to_complex().unwrap()[0], x[0]);
+    }
+
+    #[test]
+    fn descriptor_layout() {
+        let d = InjectionDescriptor {
+            enabled: true,
+            tile: 2,
+            signal: 3,
+            element: 17,
+            stage: 1,
+            bit: 31,
+            word: 1,
+        };
+        match d.to_tensor() {
+            HostTensor::I32 { shape, data } => {
+                assert_eq!(shape, vec![8]);
+                assert_eq!(data, vec![1, 2, 3, 17, 1, 31, 1, 0]);
+            }
+            _ => panic!("wrong dtype"),
+        }
+        match InjectionDescriptor::NONE.to_tensor() {
+            HostTensor::I32 { data, .. } => assert_eq!(data[0], 0),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn complex_requires_pair_axis() {
+        let t = HostTensor::F32 { shape: vec![4, 3], data: vec![0.0; 12] };
+        assert!(t.to_complex().is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal complex arithmetic (substrate for `num-complex`).
+//!
+//! The coordinator keeps all host-side signal data as `C64` (f64 pairs)
+//! and converts at the runtime boundary to the artifact's precision.
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// exp(i * theta)
+    pub fn cis(theta: f64) -> Self {
+        Self { re: theta.cos(), im: theta.sin() }
+    }
+
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    pub fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+
+    pub fn scale(self, s: f64) -> Self {
+        Self { re: self.re * s, im: self.im * s }
+    }
+}
+
+impl Add for C64 {
+    type Output = C64;
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for C64 {
+    fn add_assign(&mut self, o: C64) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for C64 {
+    type Output = C64;
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl SubAssign for C64 {
+    fn sub_assign(&mut self, o: C64) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl Mul for C64 {
+    type Output = C64;
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for C64 {
+    type Output = C64;
+    fn div(self, o: C64) -> C64 {
+        let d = o.abs2();
+        C64::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+}
+
+impl Neg for C64 {
+    type Output = C64;
+    fn neg(self) -> C64 {
+        C64::new(-self.re, -self.im)
+    }
+}
+
+/// Interleave a complex slice into [re, im, re, im, ...] as `f32`.
+pub fn pack_f32(x: &[C64]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len() * 2);
+    for c in x {
+        out.push(c.re as f32);
+        out.push(c.im as f32);
+    }
+    out
+}
+
+/// Interleave a complex slice into [re, im, ...] as `f64`.
+pub fn pack_f64(x: &[C64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(x.len() * 2);
+    for c in x {
+        out.push(c.re);
+        out.push(c.im);
+    }
+    out
+}
+
+pub fn unpack_f32(x: &[f32]) -> Vec<C64> {
+    x.chunks_exact(2)
+        .map(|p| C64::new(p[0] as f64, p[1] as f64))
+        .collect()
+}
+
+pub fn unpack_f64(x: &[f64]) -> Vec<C64> {
+    x.chunks_exact(2).map(|p| C64::new(p[0], p[1])).collect()
+}
+
+/// max |a - b| over two complex slices.
+pub fn max_abs_diff(a: &[C64], b: &[C64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x - *y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// max |v| over a complex slice.
+pub fn max_abs(a: &[C64]) -> f64 {
+    a.iter().map(|x| x.abs()).fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_ops() {
+        let a = C64::new(1.0, 2.0);
+        let b = C64::new(3.0, -1.0);
+        assert_eq!(a + b, C64::new(4.0, 1.0));
+        assert_eq!(a - b, C64::new(-2.0, 3.0));
+        assert_eq!(a * b, C64::new(5.0, 5.0));
+        let q = (a * b) / b;
+        assert!((q - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        let w = C64::cis(std::f64::consts::FRAC_PI_2);
+        assert!((w - C64::new(0.0, 1.0)).abs() < 1e-12);
+        assert!((C64::cis(0.3).abs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let x = vec![C64::new(1.5, -2.5), C64::new(0.0, 3.0)];
+        assert_eq!(unpack_f64(&pack_f64(&x)), x);
+        let via32 = unpack_f32(&pack_f32(&x));
+        assert!(max_abs_diff(&via32, &x) < 1e-6);
+    }
+
+    #[test]
+    fn finite_checks() {
+        assert!(C64::new(1.0, 2.0).is_finite());
+        assert!(!C64::new(f64::INFINITY, 0.0).is_finite());
+        assert!(!C64::new(0.0, f64::NAN).is_finite());
+    }
+}

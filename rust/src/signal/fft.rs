@@ -1,0 +1,150 @@
+//! Native rust FFT + naive DFT — the coordinator's independent oracle.
+//!
+//! Used to (a) verify artifact outputs in integration tests without
+//! trusting the python oracle, (b) re-execute tiles host-side in failure
+//! drills, and (c) benchmark the PJRT dispatch overhead against a pure
+//! in-process transform.
+
+use super::complex::C64;
+
+/// In-place iterative radix-2 Cooley-Tukey FFT (forward, no scaling).
+/// `x.len()` must be a power of two.
+pub fn fft_inplace(x: &mut [C64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft size {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i.reverse_bits() >> (usize::BITS - bits)) as usize;
+        if j > i {
+            x.swap(i, j);
+        }
+    }
+    let mut m = 2;
+    while m <= n {
+        let half = m / 2;
+        let step = -2.0 * std::f64::consts::PI / m as f64;
+        for chunk in x.chunks_exact_mut(m) {
+            for j in 0..half {
+                let w = C64::cis(step * j as f64);
+                let t = w * chunk[j + half];
+                let u = chunk[j];
+                chunk[j] = u + t;
+                chunk[j + half] = u - t;
+            }
+        }
+        m <<= 1;
+    }
+}
+
+/// Forward FFT returning a new vector.
+pub fn fft(x: &[C64]) -> Vec<C64> {
+    let mut out = x.to_vec();
+    fft_inplace(&mut out);
+    out
+}
+
+/// Inverse FFT (with 1/N scaling).
+pub fn ifft(x: &[C64]) -> Vec<C64> {
+    let mut out: Vec<C64> = x.iter().map(|c| c.conj()).collect();
+    fft_inplace(&mut out);
+    let s = 1.0 / x.len() as f64;
+    out.iter_mut().for_each(|c| *c = c.conj().scale(s));
+    out
+}
+
+/// O(N^2) direct DFT — the slowest, most obviously correct oracle.
+pub fn dft_naive(x: &[C64]) -> Vec<C64> {
+    let n = x.len();
+    let mut out = vec![C64::ZERO; n];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = C64::ZERO;
+        for (j, &v) in x.iter().enumerate() {
+            let theta = -2.0 * std::f64::consts::PI * (j * k % n) as f64 / n as f64;
+            acc += v * C64::cis(theta);
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Batched forward FFT over contiguous signals of length `n`.
+pub fn fft_batched(x: &[C64], n: usize) -> Vec<C64> {
+    assert_eq!(x.len() % n, 0);
+    let mut out = x.to_vec();
+    for chunk in out.chunks_exact_mut(n) {
+        fft_inplace(chunk);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::complex::max_abs_diff;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<C64> {
+        (0..n).map(|_| C64::new(rng.gaussian(), rng.gaussian())).collect()
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(5);
+        for n in [1usize, 2, 4, 8, 64, 256] {
+            let x = randv(&mut rng, n);
+            let err = max_abs_diff(&fft(&x), &dft_naive(&x));
+            assert!(err < 1e-9 * n as f64, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(6);
+        let x = randv(&mut rng, 512);
+        let err = max_abs_diff(&ifft(&fft(&x)), &x);
+        assert!(err < 1e-10, "err={err}");
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut x = vec![C64::ZERO; 16];
+        x[0] = C64::ONE;
+        for v in fft(&x) {
+            assert!((v - C64::ONE).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::new(7);
+        let x = randv(&mut rng, 128);
+        let y = randv(&mut rng, 128);
+        let axy: Vec<C64> = x.iter().zip(&y).map(|(a, b)| a.scale(2.0) + *b).collect();
+        let fx = fft(&x);
+        let fy = fft(&y);
+        let want: Vec<C64> = fx.iter().zip(&fy).map(|(a, b)| a.scale(2.0) + *b).collect();
+        assert!(max_abs_diff(&fft(&axy), &want) < 1e-9);
+    }
+
+    #[test]
+    fn batched_equals_loop() {
+        let mut rng = Rng::new(8);
+        let x = randv(&mut rng, 4 * 64);
+        let batched = fft_batched(&x, 64);
+        for (i, chunk) in x.chunks_exact(64).enumerate() {
+            let single = fft(chunk);
+            assert!(max_abs_diff(&batched[i * 64..(i + 1) * 64], &single) < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        let mut x = vec![C64::ZERO; 12];
+        fft_inplace(&mut x);
+    }
+}

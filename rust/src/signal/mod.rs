@@ -1,0 +1,6 @@
+//! Host-side signal substrate: complex arithmetic, a native FFT oracle,
+//! and the two-sided checksum algebra mirrored from the kernels.
+
+pub mod checksum;
+pub mod complex;
+pub mod fft;

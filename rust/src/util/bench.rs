@@ -1,0 +1,173 @@
+//! Micro/macro benchmark harness (offline substrate for `criterion`).
+//!
+//! Warmup + timed sampling with outlier-robust statistics, printed in a
+//! fixed-width layout the bench binaries and `bench-figure` subcommands
+//! share. Wall-clock on the PJRT-CPU backend is used for every *relative*
+//! claim (FT overhead, scheme ordering); absolute GPU GFLOPS figures come
+//! from the perf model instead (DESIGN.md §1).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            sample_iters: 12,
+            max_total: Duration::from_secs(20),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for CI runs / smoke benches.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            sample_iters: 4,
+            max_total: Duration::from_secs(6),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Summary,
+    /// optional work term for throughput reporting (e.g. flops per iter)
+    pub work_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.samples.median()
+    }
+
+    /// work_per_iter / median time (e.g. GFLOPS when work is flops).
+    pub fn throughput(&self) -> f64 {
+        let t = self.median_secs();
+        if t > 0.0 {
+            self.work_per_iter / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        let med = self.median_secs();
+        let (scale, unit) = time_unit(med);
+        format!(
+            "{:<44} {:>9.3} {:<2} (+/-{:>5.1}%, n={})",
+            self.name,
+            med * scale,
+            unit,
+            if med > 0.0 {
+                100.0 * self.samples.stddev() / med
+            } else {
+                0.0
+            },
+            self.samples.len()
+        )
+    }
+}
+
+fn time_unit(secs: f64) -> (f64, &'static str) {
+    if secs >= 1.0 {
+        (1.0, "s")
+    } else if secs >= 1e-3 {
+        (1e3, "ms")
+    } else if secs >= 1e-6 {
+        (1e6, "us")
+    } else {
+        (1e9, "ns")
+    }
+}
+
+/// Run a benchmark: `f` is called once per iteration.
+pub fn run<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    run_with_work(name, cfg, 0.0, &mut f)
+}
+
+/// Run with a declared amount of work per iteration (for throughput).
+pub fn run_with_work<F: FnMut()>(
+    name: &str,
+    cfg: &BenchConfig,
+    work_per_iter: f64,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Summary::new();
+    let start = Instant::now();
+    for _ in 0..cfg.sample_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if start.elapsed() > cfg.max_total && samples.len() >= 3 {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples,
+        work_per_iter,
+    }
+}
+
+/// 5 N log2 N flops per complex FFT signal (the standard accounting the
+/// paper's GFLOPS figures use).
+pub fn fft_flops(n: usize, batch: usize) -> f64 {
+    5.0 * (n as f64) * (n as f64).log2() * batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = BenchConfig { warmup_iters: 1, sample_iters: 5, max_total: Duration::from_secs(2) };
+        let mut acc = 0u64;
+        let r = run("spin", &cfg, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.median_secs() > 0.0);
+        assert_eq!(r.samples.len(), 5);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn throughput_uses_work() {
+        let cfg = BenchConfig { warmup_iters: 0, sample_iters: 3, max_total: Duration::from_secs(2) };
+        let r = run_with_work("t", &cfg, 1e6, &mut || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        let tp = r.throughput();
+        assert!(tp > 1e7 && tp < 1e9, "tp={tp}");
+    }
+
+    #[test]
+    fn fft_flops_formula() {
+        assert_eq!(fft_flops(1024, 1), 5.0 * 1024.0 * 10.0);
+        assert_eq!(fft_flops(8, 2), 5.0 * 8.0 * 3.0 * 2.0);
+    }
+
+    #[test]
+    fn report_line_formats() {
+        let mut s = Summary::new();
+        s.push(0.001);
+        let r = BenchResult { name: "x".into(), samples: s, work_per_iter: 0.0 };
+        assert!(r.report_line().contains("ms"));
+    }
+}

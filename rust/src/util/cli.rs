@@ -1,0 +1,167 @@
+//! Tiny CLI argument parser (offline substrate for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals, with
+//! typed getters and a generated usage string. Enough for the `turbofft`
+//! launcher's subcommands without pulling in a dependency the image
+//! doesn't vendor.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    spec: Vec<(String, String, String)>, // (name, default, help)
+}
+
+impl Args {
+    /// Parse `argv` (already stripped of the program/subcommand names).
+    pub fn parse(argv: &[String]) -> Result<Self, String> {
+        Self::parse_with_bools(argv, &[])
+    }
+
+    /// Parse with a list of known boolean flags, which never consume the
+    /// following token as their value (resolves `--verbose positional`).
+    pub fn parse_with_bools(argv: &[String], bools: &[&str]) -> Result<Self, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if !bools.contains(&body)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    a.flags.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    /// Declare an option (for `usage()`); returns self for chaining.
+    pub fn declare(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.spec.push((name.into(), default.into(), help.into()));
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut out = format!("usage: turbofft {cmd} [options]\n");
+        for (name, default, help) in &self.spec {
+            out.push_str(&format!("  --{name:<18} {help} (default: {default})\n"));
+        }
+        out
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: expected integer, got {v:?} ({e})")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: expected number, got {v:?} ({e})")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key}: expected integer, got {v:?} ({e})")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("--{key}: expected bool, got {v:?}")),
+        }
+    }
+
+    /// Reject unknown flags (catches typos early).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k} (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse_with_bools(
+            &sv(&["--n", "1024", "--prec=f64", "--verbose", "pos1"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 1024);
+        assert_eq!(a.str_or("prec", "f32"), "f64");
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert_eq!(a.usize_or("n", 256).unwrap(), 256);
+        assert_eq!(a.f64_or("delta", 1e-4).unwrap(), 1e-4);
+        assert!(!a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let a = Args::parse(&sv(&["--n", "abc"])).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = Args::parse(&sv(&["--typo", "1"])).unwrap();
+        assert!(a.check_known(&["n", "prec"]).is_err());
+        assert!(a.check_known(&["typo"]).is_ok());
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline-image substrates: JSON, CLI parsing, PRNG, bench harness,
+//! property testing, summary statistics (DESIGN.md §1 substitution table).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,60 @@
+//! Property-testing helper (offline substrate for `proptest`).
+//!
+//! Runs a property over many seeded random cases and reports the failing
+//! seed for reproduction. No shrinking — cases are generated from a seed,
+//! so re-running a failure is `case(seed)` in a debugger.
+
+use super::rng::Rng;
+
+/// Number of cases per property (kept moderate: several properties drive
+/// PJRT executions).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    mut prop: F,
+) {
+    for case in 0..cases {
+        let seed = 0xBEEF_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Assert helper that produces `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check("u < 1", 32, |rng| {
+            let u = rng.uniform();
+            prop_assert!(u < 1.0, "u = {u}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_with_seed_in_message() {
+        check("always fails eventually", 8, |rng| {
+            let v = rng.below(4);
+            prop_assert!(v != 3, "hit 3");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,4 @@
+//! Workload substrate: signal generators and serving traces.
+
+pub mod signals;
+pub mod trace;

@@ -1,0 +1,92 @@
+//! Test-signal generators (paper §V: gaussian random test signals; plus
+//! the structured signals the examples use).
+
+use crate::signal::complex::C64;
+use crate::util::rng::Rng;
+
+/// Complex gaussian noise, batch*n values (the paper's §V-C workload).
+pub fn gaussian_batch(rng: &mut Rng, batch: usize, n: usize) -> Vec<C64> {
+    (0..batch * n)
+        .map(|_| C64::new(rng.gaussian(), rng.gaussian()))
+        .collect()
+}
+
+/// A sum of complex exponentials at the given (bin, amplitude) pairs —
+/// produces known spectral peaks (used by the spectral-analysis example).
+pub fn tones(n: usize, comps: &[(usize, f64)]) -> Vec<C64> {
+    (0..n)
+        .map(|t| {
+            comps.iter().fold(C64::ZERO, |acc, &(bin, amp)| {
+                let theta = 2.0 * std::f64::consts::PI * (bin * t % n) as f64 / n as f64;
+                acc + C64::cis(theta).scale(amp)
+            })
+        })
+        .collect()
+}
+
+/// Tones buried in gaussian noise with the given SNR (amplitude ratio).
+pub fn noisy_tones(rng: &mut Rng, n: usize, comps: &[(usize, f64)], noise: f64) -> Vec<C64> {
+    let mut x = tones(n, comps);
+    for v in x.iter_mut() {
+        *v += C64::new(rng.gaussian(), rng.gaussian()).scale(noise);
+    }
+    x
+}
+
+/// A linear chirp (molecular-dynamics-style broadband content).
+pub fn chirp(n: usize, f0: f64, f1: f64) -> Vec<C64> {
+    (0..n)
+        .map(|t| {
+            let tt = t as f64 / n as f64;
+            let phase = 2.0 * std::f64::consts::PI
+                * (f0 * tt + 0.5 * (f1 - f0) * tt * tt)
+                * n as f64
+                / n as f64;
+            C64::cis(phase)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::fft;
+
+    #[test]
+    fn gaussian_batch_sizes() {
+        let mut rng = Rng::new(1);
+        let x = gaussian_batch(&mut rng, 4, 64);
+        assert_eq!(x.len(), 256);
+        let mean: f64 = x.iter().map(|c| c.re).sum::<f64>() / 256.0;
+        assert!(mean.abs() < 0.2);
+    }
+
+    #[test]
+    fn tones_peak_at_right_bins() {
+        let x = tones(64, &[(5, 1.0), (17, 0.5)]);
+        let y = fft::fft(&x);
+        let mags: Vec<f64> = y.iter().map(|c| c.abs()).collect();
+        let mut order: Vec<usize> = (0..64).collect();
+        order.sort_by(|&a, &b| mags[b].partial_cmp(&mags[a]).unwrap());
+        assert_eq!(order[0], 5);
+        assert_eq!(order[1], 17);
+    }
+
+    #[test]
+    fn noisy_tones_still_detectable() {
+        let mut rng = Rng::new(2);
+        let x = noisy_tones(&mut rng, 256, &[(40, 1.0)], 0.05);
+        let y = fft::fft(&x);
+        let peak = (0..256).max_by(|&a, &b| {
+            y[a].abs().partial_cmp(&y[b].abs()).unwrap()
+        }).unwrap();
+        assert_eq!(peak, 40);
+    }
+
+    #[test]
+    fn chirp_is_unit_magnitude() {
+        for v in chirp(128, 0.0, 0.5) {
+            assert!((v.abs() - 1.0).abs() < 1e-12);
+        }
+    }
+}

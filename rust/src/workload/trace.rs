@@ -1,0 +1,95 @@
+//! Serving traces: open-loop Poisson arrivals with a size mix — the
+//! request stream the serving example and `turbofft serve` replay.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// arrival offset from trace start, seconds
+    pub at: f64,
+    pub n: usize,
+    /// request id within the trace
+    pub id: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// mean arrivals per second
+    pub rate: f64,
+    /// (size, weight) mix of FFT lengths
+    pub size_mix: Vec<(usize, f64)>,
+    pub duration_secs: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            rate: 2000.0,
+            size_mix: vec![(256, 0.5), (1024, 0.3), (4096, 0.2)],
+            duration_secs: 1.0,
+            seed: 7,
+        }
+    }
+}
+
+/// Generate the full arrival trace (deterministic for a given config).
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceEvent> {
+    let mut rng = Rng::new(cfg.seed);
+    let total_w: f64 = cfg.size_mix.iter().map(|&(_, w)| w).sum();
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut id = 0;
+    while t < cfg.duration_secs {
+        t += rng.exponential(cfg.rate);
+        if t >= cfg.duration_secs {
+            break;
+        }
+        let mut pick = rng.uniform() * total_w;
+        let mut n = cfg.size_mix[0].0;
+        for &(size, w) in &cfg.size_mix {
+            if pick < w {
+                n = size;
+                break;
+            }
+            pick -= w;
+        }
+        out.push(TraceEvent { at: t, n, id });
+        id += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_sized() {
+        let cfg = TraceConfig { rate: 5000.0, duration_secs: 0.5, ..Default::default() };
+        let tr = generate(&cfg);
+        assert!(tr.len() > 1000, "got {}", tr.len());
+        assert!(tr.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(tr.iter().all(|e| e.at < 0.5));
+        let sizes: std::collections::BTreeSet<usize> =
+            tr.iter().map(|e| e.n).collect();
+        assert_eq!(sizes, [256usize, 1024, 4096].into_iter().collect());
+    }
+
+    #[test]
+    fn rate_is_respected() {
+        let cfg = TraceConfig { rate: 1000.0, duration_secs: 2.0, ..Default::default() };
+        let tr = generate(&cfg);
+        let got = tr.len() as f64 / 2.0;
+        assert!((got - 1000.0).abs() < 100.0, "rate {got}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.at == y.at && x.n == y.n));
+    }
+}

@@ -1,0 +1,277 @@
+//! End-to-end coordinator tests: serving correctness, FT transparency
+//! under injection, delayed batched correction accounting, recompute
+//! paths, and quiesce semantics.
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::OnceLock;
+
+use turbofft::coordinator::{
+    BatchPolicy, Config, Coordinator, FtStatus, InjectHook,
+};
+use turbofft::faults::Campaign;
+use turbofft::runtime::{InjectionDescriptor, Precision, Runtime, Scheme};
+use turbofft::signal::{complex, fft};
+use turbofft::util::rng::Rng;
+use turbofft::workload::signals;
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = Runtime::default_dir();
+        if !Path::new(&dir).join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+            return None;
+        }
+        Some(Runtime::new(&dir).expect("runtime init"))
+    })
+    .as_ref()
+}
+
+fn smallest_n(rt: &Runtime) -> usize {
+    *rt.manifest.sizes().first().unwrap()
+}
+
+fn check_all(
+    inputs: &[Vec<complex::C64>],
+    results: Vec<turbofft::coordinator::RequestResult>,
+) -> (f64, Vec<FtStatus>) {
+    let mut worst = 0.0f64;
+    let mut statuses = Vec::new();
+    for (x, r) in inputs.iter().zip(results) {
+        let resp = r.expect("request should succeed");
+        let want = fft::fft(x);
+        let err = complex::max_abs_diff(&resp.data, &want) / complex::max_abs(&want);
+        worst = worst.max(err);
+        statuses.push(resp.ft);
+    }
+    (worst, statuses)
+}
+
+fn submit_many(
+    coord: &Coordinator,
+    rng: &mut Rng,
+    n: usize,
+    count: usize,
+) -> (Vec<Vec<complex::C64>>, Vec<turbofft::coordinator::RequestResult>) {
+    let mut inputs = Vec::new();
+    let mut rxs = Vec::new();
+    for _ in 0..count {
+        let x = signals::gaussian_batch(rng, 1, n);
+        inputs.push(x.clone());
+        rxs.push(coord.submit(Precision::F32, x));
+    }
+    let results = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    (inputs, results)
+}
+
+#[test]
+fn clean_serving_is_verified_and_correct() {
+    let Some(rt) = runtime() else { return };
+    let n = smallest_n(rt);
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::FtBlock,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(21);
+    let (inputs, results) = submit_many(&coord, &mut rng, n, 40);
+    let (worst, statuses) = check_all(&inputs, results);
+    assert!(worst < 1e-3, "worst {worst}");
+    assert!(statuses.iter().all(|s| *s == FtStatus::Verified));
+    assert_eq!(coord.metrics.completed.load(Ordering::Relaxed), 40);
+    assert_eq!(coord.metrics.faults_detected.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn injected_faults_are_corrected_transparently() {
+    let Some(rt) = runtime() else { return };
+    let n = smallest_n(rt);
+    let hook: InjectHook = {
+        let mut rng = Rng::new(0xF00);
+        Box::new(move |seq, entry| {
+            if seq % 2 == 1 {
+                let mut d = Campaign::random_descriptor(&mut rng, entry);
+                d.bit = 31;
+                d.stage = 0;
+                // hit the tile that actually carries requests (batches are
+                // zero-padded into large throughput entries)
+                d.tile = 0;
+                d.signal = rng.below(entry.bs.min(8));
+                d
+            } else {
+                InjectionDescriptor::NONE
+            }
+        })
+    };
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::FtBlock,
+        delta: 2e-4,
+        policy: BatchPolicy {
+            target_batch: 8,
+            max_delay: std::time::Duration::from_millis(1),
+        },
+        inject: Some(hook),
+    })
+    .unwrap();
+    let mut rng = Rng::new(22);
+    let (inputs, results) = submit_many(&coord, &mut rng, n, 64);
+    let (worst, statuses) = check_all(&inputs, results);
+    coord.quiesce();
+    // the whole point of the paper: outputs correct despite live SEUs
+    assert!(worst < 1e-2, "worst {worst}");
+    let corrected = statuses
+        .iter()
+        .filter(|s| matches!(s, FtStatus::Corrected | FtStatus::TileCorrected))
+        .count();
+    let handled = coord.metrics.corrected.load(Ordering::Relaxed)
+        + coord.metrics.recomputed.load(Ordering::Relaxed);
+    assert!(handled > 0, "no faults were handled");
+    assert!(
+        corrected > 0 || coord.metrics.recomputed.load(Ordering::Relaxed) > 0,
+        "statuses {statuses:?}"
+    );
+}
+
+#[test]
+fn correction_launches_are_batched() {
+    let Some(rt) = runtime() else { return };
+    let n = smallest_n(rt);
+    // inject into EVERY batch: corrections must accumulate to K before a
+    // correction launch fires (delayed batched correction, §III-B)
+    let hook: InjectHook = {
+        let mut rng = Rng::new(0xF01);
+        Box::new(move |_seq, entry| {
+            let mut d = Campaign::random_descriptor(&mut rng, entry);
+            d.bit = 31;
+            d.stage = 0;
+            d.tile = 0;
+            d.signal = rng.below(entry.bs.min(8));
+            d
+        })
+    };
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::FtBlock,
+        delta: 2e-4,
+        policy: BatchPolicy {
+            target_batch: 8,
+            max_delay: std::time::Duration::from_millis(1),
+        },
+        inject: Some(hook),
+    })
+    .unwrap();
+    let mut rng = Rng::new(23);
+    let (inputs, results) = submit_many(&coord, &mut rng, n, 64);
+    let (worst, _) = check_all(&inputs, results);
+    coord.quiesce();
+    assert!(worst < 1e-2, "worst {worst}");
+    let corrected = coord.metrics.corrected.load(Ordering::Relaxed);
+    let launches = coord.metrics.correction_launches.load(Ordering::Relaxed);
+    if corrected >= 2 {
+        assert!(
+            launches < corrected,
+            "corrections were not batched: {corrected} corrections, {launches} launches"
+        );
+    }
+}
+
+#[test]
+fn onesided_scheme_recomputes() {
+    let Some(rt) = runtime() else { return };
+    let n = smallest_n(rt);
+    if rt.manifest.find_fft(n, Precision::F32, Scheme::OneSided).is_empty() {
+        return;
+    }
+    let hook: InjectHook = {
+        let mut rng = Rng::new(0xF02);
+        Box::new(move |seq, entry| {
+            if seq == 0 {
+                let mut d = Campaign::random_descriptor(&mut rng, entry);
+                d.bit = 31;
+                d.stage = 0;
+                d.tile = 0;
+                d.signal = 0;
+                d
+            } else {
+                InjectionDescriptor::NONE
+            }
+        })
+    };
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::OneSided,
+        delta: 2e-4,
+        policy: BatchPolicy {
+            target_batch: 4,
+            max_delay: std::time::Duration::from_millis(1),
+        },
+        inject: Some(hook),
+    })
+    .unwrap();
+    let mut rng = Rng::new(24);
+    let (inputs, results) = submit_many(&coord, &mut rng, n, 4);
+    let (worst, statuses) = check_all(&inputs, results);
+    assert!(worst < 1e-2, "worst {worst}");
+    assert!(
+        statuses.iter().any(|s| *s == FtStatus::Recomputed),
+        "one-sided should recompute: {statuses:?}"
+    );
+    assert!(coord.metrics.recomputed.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn noft_scheme_reports_unprotected() {
+    let Some(rt) = runtime() else { return };
+    let n = smallest_n(rt);
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::NoFt,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(25);
+    let (inputs, results) = submit_many(&coord, &mut rng, n, 8);
+    let (worst, statuses) = check_all(&inputs, results);
+    assert!(worst < 1e-3);
+    assert!(statuses.iter().all(|s| *s == FtStatus::Unprotected));
+}
+
+#[test]
+fn mixed_sizes_route_to_distinct_plans() {
+    let Some(rt) = runtime() else { return };
+    let sizes = rt.manifest.sizes();
+    if sizes.len() < 2 {
+        return;
+    }
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::FtBlock,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::new(26);
+    let mut worst = 0.0f64;
+    for &n in sizes.iter().take(2) {
+        let x = signals::gaussian_batch(&mut rng, 1, n);
+        let resp = coord.submit_sync(Precision::F32, x.clone()).unwrap();
+        let want = fft::fft(&x);
+        worst = worst.max(
+            complex::max_abs_diff(&resp.data, &want) / complex::max_abs(&want),
+        );
+        assert_eq!(resp.data.len(), n);
+    }
+    assert!(worst < 1e-3);
+}
+
+#[test]
+fn unsupported_size_fails_cleanly() {
+    let Some(rt) = runtime() else { return };
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::FtBlock,
+        ..Default::default()
+    })
+    .unwrap();
+    // 2^30 is certainly not in any profile
+    let resp = coord.submit_sync(Precision::F32, vec![complex::C64::ZERO; 1 << 21]);
+    match resp {
+        Err(e) => assert!(e.message.contains("plan"), "{}", e.message),
+        Ok(_) => panic!("expected failure for unsupported size"),
+    }
+}

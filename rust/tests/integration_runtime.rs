@@ -1,0 +1,312 @@
+//! Integration tests over the real AOT artifacts: the HLO-text -> PJRT
+//! round-trip, kernel numerics vs the native rust oracle, and the full
+//! detect/locate/correct algebra executed by the actual executables.
+//!
+//! Requires `make artifacts` (any profile). Tests skip gracefully only if
+//! the artifacts directory is absent so `cargo test` stays meaningful in
+//! a fresh checkout.
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use turbofft::coordinator::ft;
+use turbofft::runtime::{HostTensor, InjectionDescriptor, Precision, Runtime, Scheme};
+use turbofft::signal::checksum::{self, Verdict};
+use turbofft::signal::complex::{self, C64};
+use turbofft::signal::fft;
+use turbofft::util::rng::Rng;
+use turbofft::workload::signals;
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = Runtime::default_dir();
+        if !Path::new(&dir).join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+            return None;
+        }
+        Some(Runtime::new(&dir).expect("runtime init"))
+    })
+    .as_ref()
+}
+
+fn smallest_fft(rt: &Runtime, scheme: Scheme, prec: Precision) -> Option<turbofft::runtime::Entry> {
+    rt.manifest
+        .entries
+        .iter()
+        .filter(|e| {
+            e.op == turbofft::runtime::Op::Fft && e.scheme == scheme && e.precision == prec
+        })
+        .min_by_key(|e| e.batch * e.n)
+        .cloned()
+}
+
+#[test]
+fn noft_matches_native_fft() {
+    let Some(rt) = runtime() else { return };
+    let e = smallest_fft(rt, Scheme::NoFt, Precision::F32).expect("noft artifact");
+    let mut rng = Rng::new(1);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    let y = rt.execute(&e.name, vec![xt]).unwrap().outputs[0]
+        .to_complex()
+        .unwrap();
+    let want = fft::fft_batched(&x, e.n);
+    let err = complex::max_abs_diff(&y, &want) / complex::max_abs(&want);
+    assert!(err < 1e-4, "n={} err={err}", e.n);
+}
+
+#[test]
+fn f64_artifact_has_f64_accuracy() {
+    let Some(rt) = runtime() else { return };
+    let Some(e) = smallest_fft(rt, Scheme::NoFt, Precision::F64) else {
+        eprintln!("SKIP: no f64 artifacts in this profile");
+        return;
+    };
+    let mut rng = Rng::new(2);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], true);
+    let y = rt.execute(&e.name, vec![xt]).unwrap().outputs[0]
+        .to_complex()
+        .unwrap();
+    let want = fft::fft_batched(&x, e.n);
+    let err = complex::max_abs_diff(&y, &want) / complex::max_abs(&want);
+    assert!(err < 1e-12, "n={} err={err}", e.n);
+}
+
+#[test]
+fn staged_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let Some(e) = rt
+        .manifest
+        .entries
+        .iter()
+        .find(|e| {
+            e.op == turbofft::runtime::Op::Fft
+                && e.scheme == Scheme::NoFt
+                && e.stages >= 2
+                && e.precision == Precision::F32
+        })
+        .cloned()
+    else {
+        eprintln!("SKIP: no staged artifacts in this profile");
+        return;
+    };
+    let mut rng = Rng::new(3);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    let y = rt.execute(&e.name, vec![xt]).unwrap().outputs[0]
+        .to_complex()
+        .unwrap();
+    let want = fft::fft_batched(&x, e.n);
+    let err = complex::max_abs_diff(&y, &want) / complex::max_abs(&want);
+    assert!(err < 1e-3, "staged n={} stages={} err={err}", e.n, e.stages);
+}
+
+#[test]
+fn ft_block_clean_run_verifies() {
+    let Some(rt) = runtime() else { return };
+    let e = smallest_fft(rt, Scheme::FtBlock, Precision::F32).expect("ft_block");
+    let mut rng = Rng::new(4);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    let outs = rt
+        .execute(&e.name, vec![xt, InjectionDescriptor::NONE.to_tensor()])
+        .unwrap()
+        .outputs;
+    let judgments = ft::judge_batch(&e, &outs, 2e-4).unwrap();
+    assert_eq!(judgments.len(), e.tiles);
+    assert!(judgments.iter().all(|j| matches!(j.verdict, Verdict::Clean)),
+            "clean run flagged: {judgments:?}");
+}
+
+#[test]
+fn ft_block_detects_locates_and_corrects_via_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let e = smallest_fft(rt, Scheme::FtBlock, Precision::F32).expect("ft_block");
+    let corr = rt
+        .manifest
+        .find_correction(e.n, Precision::F32)
+        .expect("correction artifact")
+        .clone();
+    let k = rt.manifest.correction_k;
+
+    let mut rng = Rng::new(5);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let tile = e.tiles - 1;
+    let sig = e.bs / 2;
+    let desc = InjectionDescriptor {
+        enabled: true,
+        tile,
+        signal: sig,
+        element: e.n / 3,
+        stage: 0,
+        bit: 31,
+        word: 0,
+    };
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    let outs = rt.execute(&e.name, vec![xt, desc.to_tensor()]).unwrap().outputs;
+    let judgments = ft::judge_batch(&e, &outs, 2e-4).unwrap();
+    match judgments[tile].verdict {
+        Verdict::Corrupted { signal } => assert_eq!(signal, sig),
+        v => panic!("expected corruption at tile {tile}, got {v:?}"),
+    }
+    // every other tile stays clean (no cross-tile propagation)
+    for (t, j) in judgments.iter().enumerate() {
+        if t != tile {
+            assert!(matches!(j.verdict, Verdict::Clean), "tile {t}: {j:?}");
+        }
+    }
+
+    // delayed batched correction through the correction executable
+    let (c2, yc2) = ft::tile_composites(&outs, e.n, tile).unwrap();
+    let group = ft::CorrectionGroup {
+        n: e.n,
+        precision: Precision::F32,
+        items: vec![ft::CorrectionItem {
+            n: e.n,
+            precision: Precision::F32,
+            signal: sig,
+            c2,
+            yc2,
+            payload: (),
+        }],
+    };
+    let (c2t, yc2t) = ft::pack_correction_inputs(&group, k, false);
+    let delta = rt.execute(&corr.name, vec![c2t, yc2t]).unwrap().outputs[0]
+        .to_complex()
+        .unwrap();
+    let mut y = outs[0].to_complex().unwrap();
+    let base = (tile * e.bs + sig) * e.n;
+    for (o, d) in y[base..base + e.n].iter_mut().zip(&delta[..e.n]) {
+        *o += *d;
+    }
+    let want = fft::fft_batched(&x, e.n);
+    let err = complex::max_abs_diff(&y, &want) / complex::max_abs(&want);
+    assert!(err < 1e-3, "corrected err={err}");
+}
+
+#[test]
+fn ft_thread_and_onesided_detect() {
+    let Some(rt) = runtime() else { return };
+    for scheme in [Scheme::FtThread, Scheme::OneSided] {
+        let Some(e) = smallest_fft(rt, scheme, Precision::F32) else {
+            continue;
+        };
+        let mut rng = Rng::new(6);
+        let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+        let desc = InjectionDescriptor {
+            enabled: true,
+            tile: 0,
+            signal: 1.min(e.bs - 1),
+            element: 7 % e.n,
+            stage: 1,
+            bit: 31,
+            word: 1,
+        };
+        let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+        let outs = rt.execute(&e.name, vec![xt, desc.to_tensor()]).unwrap().outputs;
+        let judgments = ft::judge_batch(&e, &outs, 2e-4).unwrap();
+        match (scheme, judgments[0].verdict) {
+            (Scheme::FtThread, Verdict::Corrupted { signal }) => {
+                assert_eq!(signal, desc.signal, "{scheme}");
+            }
+            (Scheme::OneSided, Verdict::NeedsRecompute) => {}
+            (s, v) => panic!("{s}: unexpected verdict {v:?}"),
+        }
+    }
+}
+
+#[test]
+fn xlafft_baseline_runs_if_present() {
+    let Some(rt) = runtime() else { return };
+    let Some(e) = smallest_fft(rt, Scheme::XlaFft, Precision::F32) else {
+        eprintln!("SKIP: no xlafft artifacts in this profile");
+        return;
+    };
+    let mut rng = Rng::new(7);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    let y = rt.execute(&e.name, vec![xt]).unwrap().outputs[0]
+        .to_complex()
+        .unwrap();
+    let want = fft::fft_batched(&x, e.n);
+    let err = complex::max_abs_diff(&y, &want) / complex::max_abs(&want);
+    assert!(err < 1e-4, "xlafft err={err}");
+}
+
+#[test]
+fn meta_matches_host_side_checksum_math() {
+    // the kernel's exported meta must agree with the rust-side algebra
+    let Some(rt) = runtime() else { return };
+    let e = smallest_fft(rt, Scheme::FtBlock, Precision::F32).expect("ft_block");
+    let mut rng = Rng::new(8);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    let outs = rt
+        .execute(&e.name, vec![xt, InjectionDescriptor::NONE.to_tensor()])
+        .unwrap()
+        .outputs;
+    let y = outs[0].to_complex().unwrap();
+    let meta = outs[1].to_f64_vec().unwrap();
+    for t in 0..e.tiles.min(3) {
+        let host = checksum::detect_locate_host(
+            &x[t * e.bs * e.n..(t + 1) * e.bs * e.n],
+            &y[t * e.bs * e.n..(t + 1) * e.bs * e.n],
+            e.n,
+            e.bs,
+        );
+        let kernel = checksum::TileMeta::from_slice(&meta[t * 8..t * 8 + 8]);
+        // both should be tiny; they agree to f32 roundoff in scale
+        assert!((host.a2_abs - kernel.a2_abs).abs() / host.a2_abs < 1e-3,
+                "tile {t}: host a2 {} kernel {}", host.a2_abs, kernel.a2_abs);
+        assert!(kernel.residual() < 1e-4);
+        assert!(host.residual() < 1e-6);
+    }
+}
+
+#[test]
+fn wrong_shape_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let e = smallest_fft(rt, Scheme::NoFt, Precision::F32).unwrap();
+    let bad = HostTensor::F32 {
+        shape: vec![1, e.n, 2],
+        data: vec![0.0; e.n * 2],
+    };
+    assert!(rt.execute(&e.name, vec![bad]).is_err());
+    // wrong arity
+    let x = vec![C64::ZERO; e.batch * e.n];
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    assert!(rt
+        .execute(&e.name, vec![xt, InjectionDescriptor::NONE.to_tensor()])
+        .is_err());
+}
+
+#[test]
+fn checksum_offline_artifact_if_present() {
+    let Some(rt) = runtime() else { return };
+    let Some(e) = rt
+        .manifest
+        .entries
+        .iter()
+        .find(|e| e.op == turbofft::runtime::Op::Checksum && e.precision == Precision::F32)
+        .cloned()
+    else {
+        return;
+    };
+    let mut rng = Rng::new(9);
+    let x = signals::gaussian_batch(&mut rng, e.batch, e.n);
+    let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+    let cs = rt.execute(&e.name, vec![xt]).unwrap().outputs[0]
+        .to_complex()
+        .unwrap();
+    // reference: per-signal dot with ew_row
+    let a = checksum::ew_row(e.n);
+    for (b, want) in x.chunks_exact(e.n).enumerate().take(8) {
+        let dot = want
+            .iter()
+            .zip(&a)
+            .fold(C64::ZERO, |acc, (v, w)| acc + *v * *w);
+        assert!((cs[b] - dot).abs() / dot.abs().max(1.0) < 1e-3, "signal {b}");
+    }
+}

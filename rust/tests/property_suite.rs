@@ -1,0 +1,286 @@
+//! Property-based tests on system invariants (proptest substrate).
+//!
+//! Pure-host properties run hundreds of cases; artifact-backed properties
+//! run fewer (each case is a PJRT execution).
+
+use std::path::Path;
+use std::sync::OnceLock;
+
+use turbofft::coordinator::batcher::{BatchPolicy, Batcher, Pending};
+use turbofft::coordinator::request::FftRequest;
+use turbofft::plan;
+use turbofft::prop_assert;
+use turbofft::runtime::{HostTensor, InjectionDescriptor, Precision, Runtime, Scheme};
+use turbofft::signal::checksum::{self, Verdict};
+use turbofft::signal::complex::{self, C64};
+use turbofft::signal::fft;
+use turbofft::util::prop::check;
+use turbofft::util::rng::Rng;
+use turbofft::workload::signals;
+
+fn runtime() -> Option<&'static Runtime> {
+    static RT: OnceLock<Option<Runtime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = Runtime::default_dir();
+        if !Path::new(&dir).join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::new(&dir).expect("runtime init"))
+    })
+    .as_ref()
+}
+
+#[test]
+fn prop_native_fft_roundtrip() {
+    check("ifft(fft(x)) == x", 128, |rng| {
+        let n = 1usize << (1 + rng.below(10));
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.gaussian(), rng.gaussian())).collect();
+        let back = fft::ifft(&fft::fft(&x));
+        let err = complex::max_abs_diff(&back, &x);
+        prop_assert!(err < 1e-9, "n={n} err={err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fft_parseval() {
+    check("energy preserved up to N", 128, |rng| {
+        let n = 1usize << (1 + rng.below(9));
+        let x: Vec<C64> = (0..n).map(|_| C64::new(rng.gaussian(), rng.gaussian())).collect();
+        let y = fft::fft(&x);
+        let ex: f64 = x.iter().map(|c| c.abs2()).sum();
+        let ey: f64 = y.iter().map(|c| c.abs2()).sum();
+        prop_assert!((ey - n as f64 * ex).abs() < 1e-6 * ey.max(1.0),
+                     "n={n} ex={ex} ey={ey}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checksum_detects_any_single_corruption() {
+    check("single output corruption -> detect + locate", 96, |rng| {
+        let n = 1usize << (3 + rng.below(6));
+        let bs = 1usize << (1 + rng.below(4));
+        let x: Vec<C64> = (0..n * bs)
+            .map(|_| C64::new(rng.gaussian(), rng.gaussian()))
+            .collect();
+        let mut y = fft::fft_batched(&x, n);
+        let sig = rng.below(bs);
+        let elem = rng.below(n);
+        let eps = C64::new(
+            (rng.gaussian() + 2.0) * 10.0,
+            rng.gaussian() * 5.0,
+        );
+        y[sig * n + elem] += eps;
+        let meta = checksum::detect_locate_host(&x, &y, n, bs);
+        match checksum::judge_block(&meta, 1e-7, bs) {
+            Verdict::Corrupted { signal } => {
+                prop_assert!(signal == sig, "located {signal}, truth {sig} (n={n} bs={bs})");
+            }
+            v => return Err(format!("verdict {v:?} for eps {eps:?} (n={n} bs={bs})")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checksum_correction_restores_exactly() {
+    check("correction restores corrupted signal", 64, |rng| {
+        let n = 1usize << (3 + rng.below(5));
+        let bs = 1usize << (1 + rng.below(3));
+        let x: Vec<C64> = (0..n * bs)
+            .map(|_| C64::new(rng.gaussian(), rng.gaussian()))
+            .collect();
+        let clean = fft::fft_batched(&x, n);
+        let mut y = clean.clone();
+        let sig = rng.below(bs);
+        // corrupt the whole signal proportionally (input-side SEU analog)
+        let scale = 1.0 + rng.uniform();
+        for v in y[sig * n..(sig + 1) * n].iter_mut() {
+            *v = v.scale(scale);
+        }
+        // delta = FFT(c2) - yc2
+        let mut c2 = vec![C64::ZERO; n];
+        let mut yc2 = vec![C64::ZERO; n];
+        for b in 0..bs {
+            for j in 0..n {
+                c2[j] += x[b * n + j];
+                yc2[j] += y[b * n + j];
+            }
+        }
+        let fc2 = fft::fft(&c2);
+        let delta: Vec<C64> = fc2.iter().zip(&yc2).map(|(a, b)| *a - *b).collect();
+        checksum::apply_correction(&mut y, n, sig, &delta);
+        let err = complex::max_abs_diff(&y, &clean) / complex::max_abs(&clean);
+        prop_assert!(err < 1e-9, "err={err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_factors_valid() {
+    check("plan factorization invariants", 256, |rng| {
+        let n = 1usize << (1 + rng.below(22));
+        let f = plan::factors_for(n);
+        let prod: usize = f.iter().product();
+        prop_assert!(prod == n, "{f:?} != {n}");
+        prop_assert!(f.iter().all(|&x| x <= plan::MAX_TILE_N), "{f:?}");
+        prop_assert!(f.len() == plan::stages_for(n), "{f:?}");
+        // balanced: max/min <= 2 within a plan
+        let mx = *f.iter().max().unwrap();
+        let mn = *f.iter().min().unwrap();
+        prop_assert!(mx / mn <= 2, "unbalanced {f:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    check("batcher neither drops nor duplicates", 64, |rng| {
+        let mut b = Batcher::new();
+        let policy = BatchPolicy {
+            target_batch: 1 + rng.below(16),
+            max_delay: std::time::Duration::from_secs(100),
+        };
+        let count = 1 + rng.below(100);
+        let mut ids = std::collections::BTreeSet::new();
+        for i in 0..count {
+            let n = 1usize << (4 + rng.below(3));
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::mem::forget(rx);
+            b.push(Pending {
+                req: FftRequest::new(i as u64, Precision::F32, vec![C64::ZERO; n]),
+                reply: tx,
+            });
+            ids.insert(i as u64);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for batch in b
+            .pop_ready(&policy, std::time::Instant::now())
+            .into_iter()
+            .chain(b.drain_all())
+        {
+            prop_assert!(batch.items.len() <= policy.target_batch.max(count),
+                         "oversized batch");
+            for p in &batch.items {
+                prop_assert!(p.req.n == batch.key.n, "mixed sizes in batch");
+                prop_assert!(seen.insert(p.req.id), "duplicate id {}", p.req.id);
+            }
+        }
+        prop_assert!(seen == ids, "lost requests: {} of {}", seen.len(), ids.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use turbofft::util::json::{self, Json};
+    check("json print->parse is identity", 128, |rng| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.gaussian() * 1e3).round()),
+                3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+        prop_assert!(back == v, "{text}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_artifact_fft_linearity() {
+    // artifact-backed: FFT(a*x + y) == a*FFT(x) + FFT(y) on the real
+    // executable (8 cases; each is 3 PJRT executions)
+    let Some(rt) = runtime() else { return };
+    let e = rt
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| {
+            e.op == turbofft::runtime::Op::Fft
+                && e.scheme == Scheme::NoFt
+                && e.precision == Precision::F32
+        })
+        .min_by_key(|e| e.batch * e.n)
+        .cloned()
+        .unwrap();
+    check("artifact linearity", 8, |rng| {
+        let a = 1.0 + rng.uniform();
+        let x = signals::gaussian_batch(rng, e.batch, e.n);
+        let y = signals::gaussian_batch(rng, e.batch, e.n);
+        let axy: Vec<C64> = x.iter().zip(&y).map(|(u, v)| u.scale(a) + *v).collect();
+        let run = |v: &[C64]| -> Vec<C64> {
+            let t = HostTensor::from_complex(v, vec![e.batch, e.n], false);
+            rt.execute(&e.name, vec![t]).unwrap().outputs[0]
+                .to_complex()
+                .unwrap()
+        };
+        let fx = run(&x);
+        let fy = run(&y);
+        let faxy = run(&axy);
+        let want: Vec<C64> = fx.iter().zip(&fy).map(|(u, v)| u.scale(a) + *v).collect();
+        let err = complex::max_abs_diff(&faxy, &want) / complex::max_abs(&want);
+        prop_assert!(err < 1e-4, "err={err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_artifact_injection_always_detected_or_benign() {
+    // random exponent/sign injections on the real FT executable: either
+    // the residual crosses delta and the locator is right, or the output
+    // error is below tolerance (benign mantissa-scale flip)
+    let Some(rt) = runtime() else { return };
+    let e = rt
+        .manifest
+        .entries
+        .iter()
+        .filter(|e| e.scheme == Scheme::FtBlock && e.precision == Precision::F32)
+        .min_by_key(|e| e.batch * e.n)
+        .cloned()
+        .unwrap();
+    check("artifact injection detected", 10, |rng| {
+        let x = signals::gaussian_batch(rng, e.batch, e.n);
+        let desc = InjectionDescriptor {
+            enabled: true,
+            tile: rng.below(e.tiles),
+            signal: rng.below(e.bs),
+            element: rng.below(e.n),
+            stage: rng.below(2) as u8,
+            bit: [28, 29, 31][rng.below(3)],
+            word: rng.below(2) as u8,
+        };
+        let xt = HostTensor::from_complex(&x, vec![e.batch, e.n], false);
+        let outs = rt
+            .execute(&e.name, vec![xt, desc.to_tensor()])
+            .map_err(|er| er.to_string())?
+            .outputs;
+        let j = turbofft::coordinator::ft::judge_batch(&e, &outs, 2e-4)
+            .map_err(|er| er.to_string())?;
+        match j[desc.tile].verdict {
+            Verdict::Corrupted { signal } => {
+                prop_assert!(signal == desc.signal, "located {signal} truth {}", desc.signal);
+            }
+            Verdict::NeedsRecompute => {} // non-finite corruption: valid
+            Verdict::Clean => {
+                // must be benign: compare against native
+                let y = outs[0].to_complex().unwrap();
+                let want = fft::fft_batched(&x, e.n);
+                let err = complex::max_abs_diff(&y, &want) / complex::max_abs(&want);
+                prop_assert!(err < 1e-3, "undetected non-benign fault err={err} {desc:?}");
+            }
+        }
+        Ok(())
+    });
+}
