@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Local CI gate: build, tests, lints, and a 1-iteration hotpath bench
+# smoke (also regenerates BENCH_hotpath.json). Mirrors the tier-1 verify
+# in ROADMAP.md plus clippy.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+cargo clippy --workspace --all-targets -- -D warnings
+cargo bench --bench hotpath -- --quick

@@ -1,29 +1,81 @@
 //! `cargo bench --bench hotpath` — L3 hot-path microbenchmarks used by
 //! the performance pass (EXPERIMENTS.md §Perf): PJRT dispatch, host
 //! pack/unpack, checksum judging, batcher churn, native FFT, JSON parse.
+//!
+//! The FFT and detect/locate entries run in before/after pairs: the
+//! `(naive seed)` variants use the plan-free seed kernels, the unmarked
+//! names run the cached-plan engine. Results land in
+//! `BENCH_hotpath.json` (name, ns/iter, GFLOPS) for machine consumption.
+//! Pass `--quick` (or set `BENCH_QUICK`) for a 1-iteration smoke run.
 
 use turbofft::coordinator::batcher::{BatchPolicy, Batcher, Pending};
 use turbofft::coordinator::request::FftRequest;
+use turbofft::perfmodel::cost::{self, FtScheme, KernelShape};
+use turbofft::perfmodel::gpu::A100;
 use turbofft::runtime::{HostTensor, InjectionDescriptor, Precision, Runtime, Scheme};
 use turbofft::signal::checksum;
-use turbofft::signal::complex::C64;
 use turbofft::signal::fft;
-use turbofft::util::bench::{self, BenchConfig};
+use turbofft::signal::complex::C64;
+use turbofft::signal::plan::{self, FftPlan};
+use turbofft::util::bench::{self, BenchConfig, BenchResult};
+use turbofft::util::json;
 use turbofft::util::rng::Rng;
 use turbofft::workload::signals;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = BenchConfig::default();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").is_ok();
+    let cfg = if quick {
+        BenchConfig {
+            warmup_iters: 0,
+            sample_iters: 1,
+            max_total: std::time::Duration::from_secs(5),
+        }
+    } else {
+        BenchConfig::default()
+    };
     let mut rng = Rng::new(1);
+    let mut results: Vec<BenchResult> = Vec::new();
     println!("== host-side hot paths ==");
 
-    // native FFT oracle
+    // native FFT: seed kernel vs cached-plan engine
     let x4k = signals::gaussian_batch(&mut rng, 16, 4096);
-    let r = bench::run_with_work("native fft 16x4096", &cfg,
-        bench::fft_flops(4096, 16), &mut || {
+    let flops4k = bench::fft_flops(4096, 16);
+    let r = bench::run_with_work("native fft 16x4096 (naive seed)", &cfg,
+        flops4k, &mut || {
+            let _ = fft::fft_batched_naive(&x4k, 4096);
+        });
+    println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+    results.push(r);
+    let r = bench::run_with_work("native fft 16x4096 (plan seq)", &cfg,
+        flops4k, &mut || {
             let _ = fft::fft_batched(&x4k, 4096);
         });
     println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+    results.push(r);
+    let r = bench::run_with_work("native fft 16x4096", &cfg,
+        flops4k, &mut || {
+            let _ = plan::fft_batched_par(&x4k, 4096);
+        });
+    println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+    results.push(r);
+
+    // fused transform+encode (plan) over the same tile
+    let plan4k = FftPlan::get(4096);
+    let mut scratch = x4k.clone();
+    let r = bench::run_with_work("fused transform+encode 16x4096 tile", &cfg,
+        flops4k, &mut || {
+            scratch.copy_from_slice(&x4k);
+            let _ = plan4k.transform_encode_inplace(&mut scratch, 16);
+        });
+    println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+    results.push(r);
+
+    // modelled GPU context for the same shape (perf model, not measured)
+    let shape = KernelShape::from_host_plan(&plan4k, 16, 16, true);
+    let p = cost::predict(&shape, FtScheme::TwoSidedBlock, &A100);
+    println!("  (model: same shape, A100 FP64 two-sided block -> {:.0} GFLOPS)",
+             p.gflops);
 
     // pack/unpack
     let sigs = signals::gaussian_batch(&mut rng, 256, 1024);
@@ -31,14 +83,29 @@ fn main() -> anyhow::Result<()> {
         let _ = HostTensor::from_complex(&sigs, vec![256, 1024], false);
     });
     println!("{}", r.report_line());
+    results.push(r);
     let t = HostTensor::from_complex(&sigs, vec![256, 1024], false);
     let r = bench::run("unpack 256x1024 <- f32 tensor", &cfg, || {
         let _ = t.to_complex().unwrap();
     });
     println!("{}", r.report_line());
+    results.push(r);
 
-    // checksum judging
+    // checksum judging: seed formulation vs cached-plan path
     let y = fft::fft_batched(&sigs, 1024);
+    let r = bench::run("host detect_locate 256x1024 (bs=16 tiles) (naive seed)",
+        &cfg, || {
+            for t in 0..16 {
+                let _ = checksum::detect_locate_host_naive(
+                    &sigs[t * 16 * 1024..(t + 1) * 16 * 1024],
+                    &y[t * 16 * 1024..(t + 1) * 16 * 1024],
+                    1024,
+                    16,
+                );
+            }
+        });
+    println!("{}", r.report_line());
+    results.push(r);
     let r = bench::run("host detect_locate 256x1024 (bs=16 tiles)", &cfg, || {
         for t in 0..16 {
             let _ = checksum::detect_locate_host(
@@ -50,6 +117,7 @@ fn main() -> anyhow::Result<()> {
         }
     });
     println!("{}", r.report_line());
+    results.push(r);
 
     // batcher churn
     let r = bench::run("batcher push+pop 1024 requests", &cfg, || {
@@ -69,6 +137,7 @@ fn main() -> anyhow::Result<()> {
         let _ = b.pop_ready(&policy, std::time::Instant::now());
     });
     println!("{}", r.report_line());
+    results.push(r);
 
     // JSON manifest parse
     if let Ok(text) = std::fs::read_to_string(Runtime::default_dir().join("manifest.json")) {
@@ -76,6 +145,7 @@ fn main() -> anyhow::Result<()> {
             let _ = turbofft::util::json::parse(&text).unwrap();
         });
         println!("{}", r.report_line());
+        results.push(r);
     }
 
     // PJRT dispatch (device round-trip) if artifacts exist
@@ -111,7 +181,39 @@ fn main() -> anyhow::Result<()> {
                 },
             );
             println!("{}  ({:.3} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+            results.push(r);
         }
     }
+
+    // before/after summary
+    let med = |name: &str| {
+        results.iter().find(|r| r.name == name).map(BenchResult::median_secs)
+    };
+    println!("\n== plan vs naive seed ==");
+    if let (Some(naive), Some(planned)) =
+        (med("native fft 16x4096 (naive seed)"), med("native fft 16x4096"))
+    {
+        println!("native fft 16x4096:    {:.2}x faster than naive seed",
+                 naive / planned);
+    }
+    if let (Some(naive), Some(planned)) = (
+        med("host detect_locate 256x1024 (bs=16 tiles) (naive seed)"),
+        med("host detect_locate 256x1024 (bs=16 tiles)"),
+    ) {
+        println!("host detect_locate:    {:.2}x faster than naive seed",
+                 naive / planned);
+    }
+
+    // machine-readable dump
+    let entries = json::arr(results.iter().map(|r| {
+        json::obj(vec![
+            ("name", json::s(&r.name)),
+            ("ns_per_iter", json::num(r.median_secs() * 1e9)),
+            ("gflops", json::num(r.throughput() / 1e9)),
+        ])
+    }));
+    let doc = json::obj(vec![("bench", json::s("hotpath")), ("entries", entries)]);
+    std::fs::write("BENCH_hotpath.json", format!("{doc}\n"))?;
+    println!("\nwrote BENCH_hotpath.json ({} entries)", results.len());
     Ok(())
 }

@@ -123,6 +123,45 @@ pub fn tile_composites(
     ))
 }
 
+/// Host-side correction delta for a corrupted tile: Delta = FFT(c2) - yc2
+/// through the cached plan. Used when no correction artifact is available
+/// (device-less builds), mirroring what the batched correction kernel
+/// computes on-device.
+pub fn host_correction_delta(c2: &[C64], yc2: &[C64]) -> Vec<C64> {
+    assert_eq!(c2.len(), yc2.len());
+    let plan = crate::signal::plan::FftPlan::get(c2.len());
+    let mut delta = c2.to_vec();
+    plan.fft_inplace(&mut delta);
+    for (d, y) in delta.iter_mut().zip(yc2) {
+        *d -= *y;
+    }
+    delta
+}
+
+/// Host re-execution of a tile (`bs` signals of length `n`) with a
+/// time-redundant self-check: each transformed signal is inverted in
+/// place ([`FftPlan::ifft_inplace`](crate::signal::plan::FftPlan) — no
+/// per-signal allocation) and compared against its input. Returns `None`
+/// if any roundtrip disagrees, so a host-side fault cannot masquerade as
+/// a clean recompute.
+pub fn recompute_tile_host(x_tile: &[C64], n: usize) -> Option<Vec<C64>> {
+    assert_eq!(x_tile.len() % n.max(1), 0);
+    let plan = crate::signal::plan::FftPlan::get(n);
+    let mut y = x_tile.to_vec();
+    plan.fft_batched_inplace(&mut y);
+    let mut scratch = vec![C64::ZERO; n];
+    for (ys, xs) in y.chunks_exact(n).zip(x_tile.chunks_exact(n)) {
+        scratch.copy_from_slice(ys);
+        plan.ifft_inplace(&mut scratch);
+        let scale = crate::signal::complex::max_abs(xs).max(1.0);
+        let err = crate::signal::complex::max_abs_diff(&scratch, xs);
+        if err.is_nan() || err > 1e-9 * scale {
+            return None;
+        }
+    }
+    Some(y)
+}
+
 /// One tile awaiting delayed correction, with a caller-defined payload
 /// (the scheduler stores the tile outputs + response channels there).
 pub struct CorrectionItem<T> {
@@ -253,6 +292,38 @@ mod tests {
         assert_eq!(c2.shape(), &[4, 4, 2]);
         assert_eq!(yc2.shape(), &[4, 4, 2]);
         assert_eq!(c2.to_complex().unwrap()[12], C64::ONE); // padded copies
+    }
+
+    #[test]
+    fn host_recompute_and_correction_restore_a_tile() {
+        use crate::signal::fft::fft_batched;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        let (n, bs) = (64usize, 4usize);
+        let x: Vec<C64> =
+            (0..n * bs).map(|_| C64::new(rng.gaussian(), rng.gaussian())).collect();
+        let clean = fft_batched(&x, n);
+
+        // host recompute reproduces the clean outputs and self-checks
+        let y = recompute_tile_host(&x, n).expect("self-check passes");
+        assert!(crate::signal::complex::max_abs_diff(&y, &clean) < 1e-9);
+
+        // corrupt one output element, then correct host-side via the
+        // composite checksums
+        let mut bad = clean.clone();
+        bad[2 * n + 7] += C64::new(5.0, -3.0);
+        let mut c2 = vec![C64::ZERO; n];
+        let mut yc2 = vec![C64::ZERO; n];
+        for b in 0..bs {
+            for j in 0..n {
+                c2[j] += x[b * n + j];
+                yc2[j] += bad[b * n + j];
+            }
+        }
+        let delta = host_correction_delta(&c2, &yc2);
+        checksum::apply_correction(&mut bad, n, 2, &delta);
+        let err = crate::signal::complex::max_abs_diff(&bad, &clean);
+        assert!(err < 1e-9, "err={err}");
     }
 
     #[test]

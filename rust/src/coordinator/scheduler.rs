@@ -20,7 +20,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::runtime::{DeviceHandle, Entry, HostTensor, InjectionDescriptor, Precision};
-use crate::signal::checksum::Verdict;
+use crate::signal::checksum::{self, Verdict};
 use crate::signal::complex::C64;
 
 use super::batcher::{Batch, Pending};
@@ -216,8 +216,26 @@ impl Engine {
                                 self.corrections_since = None;
                             }
                         }
+                        (None, Ok((c2, yc2))) => {
+                            // no correction artifact but composites are
+                            // available: apply the delta host-side through
+                            // the cached plan instead of re-executing
+                            let delta = ft::host_correction_delta(&c2, &yc2);
+                            let mut tile_y = y[t * bs * n..(t + 1) * bs * n].to_vec();
+                            checksum::apply_correction(&mut tile_y, n, signal, &delta);
+                            self.metrics.corrected.fetch_add(1, Ordering::Relaxed);
+                            for (slot, p) in waiters {
+                                let status = if slot == signal {
+                                    FtStatus::Corrected
+                                } else {
+                                    FtStatus::TileCorrected
+                                };
+                                send_response(&self.metrics, &tile_y, n, slot, p,
+                                              status, j.residual);
+                            }
+                        }
                         _ => {
-                            // no correction artifact: recompute fallback
+                            // composites missing entirely: recompute
                             self.recompute_tile(entry, &mut recompute_cache,
                                                 t, waiters, j.residual);
                         }
@@ -271,7 +289,21 @@ impl Engine {
                     }
                 },
                 Err(e) => {
-                    fail_all(&self.metrics, waiters, &format!("recompute: {e}"));
+                    // device path unavailable (no artifacts / stub build):
+                    // re-execute on the host with a time-redundant
+                    // self-check before giving up on the requests
+                    let lo = tile * bs * n;
+                    match ft::recompute_tile_host(&x[lo..lo + bs * n], n) {
+                        Some(tile_y) => {
+                            self.metrics.recomputed.fetch_add(1, Ordering::Relaxed);
+                            respond_tile(&self.metrics, &tile_y, n, waiters,
+                                         FtStatus::Recomputed, residual);
+                        }
+                        None => {
+                            fail_all(&self.metrics, waiters,
+                                     &format!("recompute: {e}"));
+                        }
+                    }
                     return;
                 }
             }

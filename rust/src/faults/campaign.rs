@@ -217,7 +217,7 @@ impl<'a> Campaign<'a> {
                     Precision::F32 => 3e-6,
                     Precision::F64 => 1e-14,
                 };
-                !(rel <= tol)
+                rel.is_nan() || rel > tol
             } else {
                 false
             };

@@ -39,7 +39,7 @@ pub fn roc_curve(samples: &[(bool, f64)], points: usize) -> Vec<RocPoint> {
             let mut det = 0usize;
             let mut fa = 0usize;
             for &(inj, r) in samples {
-                let fired = !(r <= t); // NaN/Inf fire
+                let fired = r.is_nan() || r > t; // NaN/Inf fire
                 if inj && fired {
                     det += 1;
                 }

@@ -59,6 +59,28 @@ impl KernelShape {
             twiddle_preload: f64p,
         }
     }
+
+    /// Shape equivalent of a cached host [`FftPlan`](crate::signal::plan::FftPlan):
+    /// single launch, radix-4 butterflies, twiddles preloaded from the
+    /// plan table. Lets the bench report what the same transform would
+    /// achieve on a modelled GPU next to the measured host numbers.
+    pub fn from_host_plan(
+        plan: &crate::signal::plan::FftPlan,
+        batch: usize,
+        bs: usize,
+        f64p: bool,
+    ) -> Self {
+        KernelShape {
+            n: plan.n(),
+            batch,
+            bs,
+            stages: 1,
+            elem_bytes: if f64p { 16 } else { 8 },
+            thread_radix: 4,
+            plane_fix: true,
+            twiddle_preload: true,
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy)]

@@ -71,7 +71,7 @@ pub fn judge_block(meta: &TileMeta, delta: f64, bs: usize) -> Verdict {
     let resid = meta.residual();
     // NaN/Inf residuals are detections by definition (paper's checksum
     // test is |r| > delta; non-finite fails any sane acceptance test).
-    if !(resid <= delta) {
+    if resid.is_nan() || resid > delta {
         if !resid.is_finite() {
             return Verdict::NeedsRecompute;
         }
@@ -94,7 +94,7 @@ pub fn judge_psig(rows: &[f64], psig_len: usize, delta: f64) -> Vec<bool> {
     rows.chunks_exact(psig_len)
         .map(|r| {
             let resid = C64::new(r[0], r[1]).abs() / (r[2] + f64::MIN_POSITIVE);
-            !(resid <= delta)
+            resid.is_nan() || resid > delta
         })
         .collect()
 }
@@ -110,7 +110,16 @@ pub fn apply_correction(y_tile: &mut [C64], n: usize, signal: usize, delta: &[C6
 
 /// Host-side reference of the full detect/locate path over a raw tile
 /// (used by tests and the recompute drill; production uses kernel meta).
+/// Routes through the cached [`FftPlan`](crate::signal::plan::FftPlan)
+/// so the encoding vectors are computed once per size, not per call.
 pub fn detect_locate_host(x: &[C64], y: &[C64], n: usize, bs: usize) -> TileMeta {
+    crate::signal::plan::FftPlan::get(n).detect_locate(x, y, bs)
+}
+
+/// Seed formulation of detect/locate: rebuilds the encoding vectors and
+/// materialises the composite checksum vectors on every call. Kept as
+/// the bench baseline and as an independent oracle for the plan path.
+pub fn detect_locate_host_naive(x: &[C64], y: &[C64], n: usize, bs: usize) -> TileMeta {
     assert_eq!(x.len(), n * bs);
     assert_eq!(y.len(), n * bs);
     let a = ew_row(n);
@@ -207,6 +216,22 @@ mod tests {
         apply_correction(&mut y, n, 5, &delta);
         let err = crate::signal::complex::max_abs_diff(&y, &clean);
         assert!(err < 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn plan_path_agrees_with_naive_formulation() {
+        let mut rng = Rng::new(13);
+        let (n, bs) = (64, 4);
+        let x = tile(&mut rng, n, bs);
+        let mut y = fft_batched(&x, n);
+        y[2 * n + 9] += C64::new(-4.0, 2.0);
+        let fast = detect_locate_host(&x, &y, n, bs);
+        let slow = detect_locate_host_naive(&x, &y, n, bs);
+        let scale = slow.a2_abs.max(1.0);
+        assert!((fast.r2 - slow.r2).abs() < 1e-9 * scale);
+        assert!((fast.r3 - slow.r3).abs() < 1e-9 * scale);
+        assert_eq!(judge_block(&fast, 1e-6, bs), judge_block(&slow, 1e-6, bs));
+        assert_eq!(judge_block(&fast, 1e-6, bs), Verdict::Corrupted { signal: 2 });
     }
 
     #[test]

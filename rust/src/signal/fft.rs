@@ -4,12 +4,40 @@
 //! trusting the python oracle, (b) re-execute tiles host-side in failure
 //! drills, and (c) benchmark the PJRT dispatch overhead against a pure
 //! in-process transform.
+//!
+//! The public entry points route through the cached [`FftPlan`] (radix-4
+//! kernel over precomputed twiddle/bit-reversal tables). The seed's
+//! plan-free radix-2 kernel is kept as `*_naive` — it is the before
+//! side of the hotpath bench and a structurally independent oracle for
+//! the plan kernel.
 
 use super::complex::C64;
+use super::plan::FftPlan;
 
-/// In-place iterative radix-2 Cooley-Tukey FFT (forward, no scaling).
+/// In-place iterative FFT (forward, no scaling) through the cached plan.
 /// `x.len()` must be a power of two.
 pub fn fft_inplace(x: &mut [C64]) {
+    FftPlan::get(x.len()).fft_inplace(x);
+}
+
+/// Forward FFT returning a new vector.
+pub fn fft(x: &[C64]) -> Vec<C64> {
+    let mut out = x.to_vec();
+    fft_inplace(&mut out);
+    out
+}
+
+/// Inverse FFT (with 1/N scaling). Single allocation: the copy is
+/// inverted in place via [`FftPlan::ifft_inplace`].
+pub fn ifft(x: &[C64]) -> Vec<C64> {
+    let mut out = x.to_vec();
+    FftPlan::get(out.len()).ifft_inplace(&mut out);
+    out
+}
+
+/// Seed radix-2 kernel, kept plan-free on purpose: every twiddle is a
+/// fresh `cis` call. Baseline for the bench and oracle for the plan.
+pub fn fft_inplace_naive(x: &mut [C64]) {
     let n = x.len();
     assert!(n.is_power_of_two(), "fft size {n} not a power of two");
     if n <= 1 {
@@ -40,22 +68,6 @@ pub fn fft_inplace(x: &mut [C64]) {
     }
 }
 
-/// Forward FFT returning a new vector.
-pub fn fft(x: &[C64]) -> Vec<C64> {
-    let mut out = x.to_vec();
-    fft_inplace(&mut out);
-    out
-}
-
-/// Inverse FFT (with 1/N scaling).
-pub fn ifft(x: &[C64]) -> Vec<C64> {
-    let mut out: Vec<C64> = x.iter().map(|c| c.conj()).collect();
-    fft_inplace(&mut out);
-    let s = 1.0 / x.len() as f64;
-    out.iter_mut().for_each(|c| *c = c.conj().scale(s));
-    out
-}
-
 /// O(N^2) direct DFT — the slowest, most obviously correct oracle.
 pub fn dft_naive(x: &[C64]) -> Vec<C64> {
     let n = x.len();
@@ -74,9 +86,19 @@ pub fn dft_naive(x: &[C64]) -> Vec<C64> {
 /// Batched forward FFT over contiguous signals of length `n`.
 pub fn fft_batched(x: &[C64], n: usize) -> Vec<C64> {
     assert_eq!(x.len() % n, 0);
+    let plan = FftPlan::get(n);
+    let mut out = x.to_vec();
+    plan.fft_batched_inplace(&mut out);
+    out
+}
+
+/// Batched forward FFT through the seed per-butterfly-`cis` kernel
+/// (bench baseline).
+pub fn fft_batched_naive(x: &[C64], n: usize) -> Vec<C64> {
+    assert_eq!(x.len() % n, 0);
     let mut out = x.to_vec();
     for chunk in out.chunks_exact_mut(n) {
-        fft_inplace(chunk);
+        fft_inplace_naive(chunk);
     }
     out
 }
@@ -97,6 +119,18 @@ mod tests {
         for n in [1usize, 2, 4, 8, 64, 256] {
             let x = randv(&mut rng, n);
             let err = max_abs_diff(&fft(&x), &dft_naive(&x));
+            assert!(err < 1e-9 * n as f64, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn planned_matches_seed_kernel() {
+        let mut rng = Rng::new(9);
+        for n in [2usize, 8, 32, 1024] {
+            let x = randv(&mut rng, n);
+            let mut seed = x.clone();
+            fft_inplace_naive(&mut seed);
+            let err = max_abs_diff(&fft(&x), &seed);
             assert!(err < 1e-9 * n as f64, "n={n} err={err}");
         }
     }

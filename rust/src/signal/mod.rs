@@ -4,3 +4,4 @@
 pub mod checksum;
 pub mod complex;
 pub mod fft;
+pub mod plan;

@@ -1,0 +1,162 @@
+//! Property suite for the plan-based FFT engine: the plan kernel against
+//! the O(N^2) DFT oracle across every power-of-two size, bit-identity of
+//! the parallel batch path, fused encode vs the detached checksum
+//! formulation, and the host correction/recompute drill end to end.
+
+use turbofft::coordinator::ft;
+use turbofft::signal::checksum::{self, Verdict};
+use turbofft::signal::complex::{max_abs_diff, C64};
+use turbofft::signal::fft;
+use turbofft::signal::plan::{self, FftPlan};
+use turbofft::util::rng::Rng;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.gaussian(), rng.gaussian())).collect()
+}
+
+#[test]
+fn plan_matches_naive_dft_all_pow2_sizes() {
+    let mut rng = Rng::new(101);
+    let mut n = 1usize;
+    while n <= 4096 {
+        let x = randv(&mut rng, n);
+        let plan = FftPlan::get(n);
+        let got = plan.fft(&x);
+        let want = fft::dft_naive(&x);
+        let err = max_abs_diff(&got, &want);
+        assert!(err < 1e-9 * n as f64, "n={n} err={err}");
+        n *= 2;
+    }
+}
+
+#[test]
+fn plan_matches_seed_radix2_kernel_all_pow2_sizes() {
+    let mut rng = Rng::new(102);
+    let mut n = 1usize;
+    while n <= 4096 {
+        let x = randv(&mut rng, n);
+        let mut seed = x.clone();
+        fft::fft_inplace_naive(&mut seed);
+        let err = max_abs_diff(&FftPlan::get(n).fft(&x), &seed);
+        assert!(err < 1e-9 * n.max(1) as f64, "n={n} err={err}");
+        n *= 2;
+    }
+}
+
+#[test]
+fn parallel_batch_bit_identical_to_sequential() {
+    let mut rng = Rng::new(103);
+    for (n, batch) in [(64usize, 3usize), (1024, 7), (4096, 16)] {
+        let x = randv(&mut rng, n * batch);
+        let seq = fft::fft_batched(&x, n);
+        let par = plan::fft_batched_par(&x, n);
+        assert!(seq == par, "n={n} batch={batch}: parallel path diverged");
+    }
+}
+
+#[test]
+fn ifft_inplace_inverts_forward_transform() {
+    let mut rng = Rng::new(104);
+    for n in [1usize, 2, 16, 512, 4096] {
+        let x = randv(&mut rng, n);
+        let plan = FftPlan::get(n);
+        let mut y = plan.fft(&x);
+        plan.ifft_inplace(&mut y);
+        let err = max_abs_diff(&y, &x);
+        assert!(err < 1e-9, "n={n} err={err}");
+        // allocating wrapper agrees
+        let z = plan.ifft(&plan.fft(&x));
+        assert!(max_abs_diff(&z, &x) < 1e-9);
+    }
+}
+
+#[test]
+fn fused_encode_clean_tile_matches_detached_and_judges_clean() {
+    let mut rng = Rng::new(105);
+    let (n, bs) = (256usize, 8usize);
+    let x = randv(&mut rng, n * bs);
+    let plan = FftPlan::get(n);
+    let mut y = x.clone();
+    let fused = plan.transform_encode_inplace(&mut y, bs);
+    assert!(y == fft::fft_batched(&x, n), "fused outputs != batched fft");
+    let detached = checksum::detect_locate_host_naive(&x, &y, n, bs);
+    let scale = detached.a2_abs.max(1.0);
+    assert!((fused.r2 - detached.r2).abs() < 1e-9 * scale);
+    assert!((fused.r3 - detached.r3).abs() < 1e-9 * scale);
+    assert_eq!(checksum::judge_block(&fused, 1e-6, bs), Verdict::Clean);
+}
+
+#[test]
+fn fused_encode_locates_corruption_like_detached_path() {
+    let mut rng = Rng::new(106);
+    let (n, bs) = (128usize, 8usize);
+    let x = randv(&mut rng, n * bs);
+    let plan = FftPlan::get(n);
+    for victim in [0usize, 3, bs - 1] {
+        let mut y = fft::fft_batched(&x, n);
+        y[victim * n + 11] += C64::new(4.0, 2.5);
+        let fast = plan.detect_locate(&x, &y, bs);
+        let slow = checksum::detect_locate_host_naive(&x, &y, n, bs);
+        assert_eq!(
+            checksum::judge_block(&fast, 1e-6, bs),
+            checksum::judge_block(&slow, 1e-6, bs),
+        );
+        match checksum::judge_block(&fast, 1e-6, bs) {
+            Verdict::Corrupted { signal } => assert_eq!(signal, victim),
+            v => panic!("victim {victim}: wrong verdict {v:?}"),
+        }
+    }
+}
+
+#[test]
+fn host_correction_restores_located_tile() {
+    let mut rng = Rng::new(107);
+    let (n, bs) = (256usize, 4usize);
+    let x = randv(&mut rng, n * bs);
+    let clean = fft::fft_batched(&x, n);
+    let mut y = clean.clone();
+    y[n + 42] += C64::new(-7.0, 3.0);
+    let meta = checksum::detect_locate_host(&x, &y, n, bs);
+    let signal = match checksum::judge_block(&meta, 1e-6, bs) {
+        Verdict::Corrupted { signal } => signal,
+        v => panic!("wrong verdict {v:?}"),
+    };
+    assert_eq!(signal, 1);
+    // composites as the kernels would ship them
+    let mut c2 = vec![C64::ZERO; n];
+    let mut yc2 = vec![C64::ZERO; n];
+    for b in 0..bs {
+        for j in 0..n {
+            c2[j] += x[b * n + j];
+            yc2[j] += y[b * n + j];
+        }
+    }
+    let delta = ft::host_correction_delta(&c2, &yc2);
+    checksum::apply_correction(&mut y, n, signal, &delta);
+    let err = max_abs_diff(&y, &clean);
+    assert!(err < 1e-9, "err={err}");
+}
+
+#[test]
+fn host_recompute_self_checks() {
+    let mut rng = Rng::new(108);
+    let (n, bs) = (512usize, 4usize);
+    let x = randv(&mut rng, n * bs);
+    let y = ft::recompute_tile_host(&x, n).expect("roundtrip self-check");
+    assert!(max_abs_diff(&y, &fft::fft_batched(&x, n)) < 1e-12);
+    // non-finite input cannot pass the self-check
+    let mut bad = x.clone();
+    bad[3] = C64::new(f64::NAN, 0.0);
+    assert!(ft::recompute_tile_host(&bad, n).is_none());
+}
+
+#[test]
+fn plan_cache_returns_shared_instances() {
+    let a = FftPlan::get(2048);
+    let b = FftPlan::get(2048);
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert_eq!(a.n(), 2048);
+    assert_eq!(a.log2n(), 11);
+    assert_eq!(a.ew_row().len(), 2048);
+    assert_eq!(a.wang_e1().len(), 2048);
+}

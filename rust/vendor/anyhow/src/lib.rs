@@ -1,0 +1,236 @@
+//! Offline substrate for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored crate
+//! re-implements exactly the slice of anyhow the codebase uses:
+//! `Error` + `Result`, the `anyhow!` / `bail!` / `ensure!` macros, and
+//! the `Context` extension trait. Formatting matches the real crate
+//! where it matters: `{e}` prints the outermost message, `{e:#}` prints
+//! the full context chain joined with `: `, and `{e:?}` prints the
+//! multi-line "Caused by" report `fn main() -> Result<()>` shows.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with an ordered context chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The deepest message in the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the chain from outermost to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait attaching context to fallible results.
+pub trait Context<T, E>: Sized {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn formats_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("loading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("missing file"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let n = 3;
+        let e = anyhow!("bad size {n}");
+        assert_eq!(e.to_string(), "bad size 3");
+        let e = anyhow!("got {} of {}", 1, 2);
+        assert_eq!(e.to_string(), "got 1 of 2");
+        let e = anyhow!(String::from("verbatim"));
+        assert_eq!(e.to_string(), "verbatim");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "must be ok");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "must be ok");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/turbofft-test")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+    }
+}

@@ -1,0 +1,268 @@
+//! Compile-only stub of the `xla` (PJRT) bindings the runtime layer
+//! compiles against.
+//!
+//! The build image ships neither the XLA shared library nor crates.io
+//! access, so this vendored crate provides the exact API surface used by
+//! `runtime/{device,tensor}.rs`. Host-side literal plumbing (`Literal`,
+//! shapes, dtypes) is fully functional; anything that needs the real
+//! PJRT runtime (`PjRtClient::cpu`, `compile`, `execute`) returns an
+//! error. The runtime layer surfaces that as "device unavailable", and
+//! every artifact-backed test/bench gates on `artifacts/manifest.json`
+//! and skips cleanly, so an artifact-less checkout stays green. Swapping
+//! this stub for the real bindings is a Cargo.toml path change only.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT runtime not available (offline stub build)"
+    ))
+}
+
+/// XLA primitive element types (subset + padding variants so consumer
+/// `match` arms with a wildcard stay reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+    C128,
+    Tuple,
+}
+
+/// Typed storage behind a `Literal` (public for the `NativeType` trait;
+/// not part of the real bindings' API).
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+/// Rust scalar types that map onto XLA element types.
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    #[doc(hidden)]
+    fn to_payload(data: &[Self]) -> Payload;
+    #[doc(hidden)]
+    fn from_payload(p: &Payload) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr, $variant:ident) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn to_payload(data: &[Self]) -> Payload {
+                Payload::$variant(data.to_vec())
+            }
+            fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+                match p {
+                    Payload::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32, F32);
+native!(f64, ElementType::F64, F64);
+native!(i32, ElementType::S32, I32);
+native!(i64, ElementType::S64, I64);
+
+/// A host-side array (or tuple) literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            dims: vec![data.len() as i64],
+            payload: T::to_payload(data),
+        }
+    }
+
+    /// Tuple literal (what `execute` returns with `return_tuple=True`).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::Tuple, dims: Vec::new(), payload: Payload::Tuple(parts) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have: i64 = self.dims.iter().product();
+        if want != have {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { ty: self.ty, dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return Err(Error("tuple literal has no array shape".to_string()));
+        }
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_payload(&self.payload).ok_or_else(|| {
+            Error(format!("literal holds {:?}, asked for {:?}", self.ty, T::TY))
+        })
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.payload {
+            Payload::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Parsed HLO module text (opaque in the stub).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// The stub validates the file exists/reads so path errors surface at
+    /// the same place they would with the real bindings.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f64])]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<f64>().unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("not available"), "{e}");
+    }
+}
