@@ -153,9 +153,14 @@ pub fn recompute_tile_host(x_tile: &[C64], n: usize) -> Option<Vec<C64>> {
     for (ys, xs) in y.chunks_exact(n).zip(x_tile.chunks_exact(n)) {
         scratch.copy_from_slice(ys);
         plan.ifft_inplace(&mut scratch);
+        // finiteness first: a NaN anywhere in the roundtrip (or the
+        // input) must fail the self-check rather than compare as 0
+        if !scratch.iter().all(|c| c.is_finite()) || !xs.iter().all(|c| c.is_finite()) {
+            return None;
+        }
         let scale = crate::signal::complex::max_abs(xs).max(1.0);
         let err = crate::signal::complex::max_abs_diff(&scratch, xs);
-        if err.is_nan() || err > 1e-9 * scale {
+        if err > 1e-9 * scale {
             return None;
         }
     }

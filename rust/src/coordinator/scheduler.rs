@@ -171,6 +171,29 @@ impl Engine {
             per_tile[i / bs].push((i % bs, p));
         }
 
+        // The recompute cache is shared across tiles of this batch, so the
+        // re-executed input must carry EVERY tile's signals — rebuild the
+        // full packed batch now, while all waiters (and their request
+        // data) are still on hand. Filling only the first recomputing
+        // tile's slots would serve later tiles FFT-of-zeros from the
+        // cache. Built lazily: clean-only batches skip the copy.
+        let x_full: Vec<C64> = if judgments
+            .iter()
+            .zip(&per_tile)
+            .any(|(j, w)| !w.is_empty() && !matches!(j.verdict, Verdict::Clean))
+        {
+            let mut x = vec![C64::ZERO; entry.batch * n];
+            for (t, waiters) in per_tile.iter().enumerate() {
+                for (slot, p) in waiters {
+                    let base = (t * bs + slot) * n;
+                    x[base..base + n].copy_from_slice(&p.req.data);
+                }
+            }
+            x
+        } else {
+            Vec::new()
+        };
+
         let mut recompute_cache: Option<Vec<C64>> = None;
         for (t, waiters) in per_tile.into_iter().enumerate() {
             if waiters.is_empty() {
@@ -237,14 +260,14 @@ impl Engine {
                         _ => {
                             // composites missing entirely: recompute
                             self.recompute_tile(entry, &mut recompute_cache,
-                                                t, waiters, j.residual);
+                                                &x_full, t, waiters, j.residual);
                         }
                     }
                 }
                 Verdict::NeedsRecompute => {
                     self.metrics.faults_detected.fetch_add(1, Ordering::Relaxed);
                     self.recompute_tile(entry, &mut recompute_cache,
-                                        t, waiters, j.residual);
+                                        &x_full, t, waiters, j.residual);
                 }
             }
         }
@@ -256,6 +279,7 @@ impl Engine {
         &mut self,
         entry: &Entry,
         cache: &mut Option<Vec<C64>>,
+        x_full: &[C64],
         tile: usize,
         waiters: Vec<(usize, Pending)>,
         residual: f64,
@@ -263,16 +287,12 @@ impl Engine {
         let n = entry.n;
         let bs = entry.bs;
         if cache.is_none() {
-            // rebuild inputs from the waiters' own request data: the
-            // original signals are still on the host (the paper's point:
-            // one-sided ABFT must re-read and re-run everything)
-            let mut x = vec![C64::ZERO; entry.batch * n];
-            for (slot, p) in &waiters {
-                let base = (tile * bs + slot) * n;
-                x[base..base + n].copy_from_slice(&p.req.data);
-            }
+            // x_full holds every tile's signals (rebuilt by `settle` from
+            // the waiters' own request data — the paper's point: one-sided
+            // ABFT must re-read and re-run everything), so the cached
+            // outputs are valid for any tile of this batch.
             let xt = HostTensor::from_complex(
-                &x,
+                x_full,
                 vec![entry.batch, n],
                 entry.precision == Precision::F64,
             );
@@ -293,7 +313,7 @@ impl Engine {
                     // re-execute on the host with a time-redundant
                     // self-check before giving up on the requests
                     let lo = tile * bs * n;
-                    match ft::recompute_tile_host(&x[lo..lo + bs * n], n) {
+                    match ft::recompute_tile_host(&x_full[lo..lo + bs * n], n) {
                         Some(tile_y) => {
                             self.metrics.recomputed.fetch_add(1, Ordering::Relaxed);
                             respond_tile(&self.metrics, &tile_y, n, waiters,

@@ -131,12 +131,15 @@ pub fn unpack_f64(x: &[f64]) -> Vec<C64> {
     x.chunks_exact(2).map(|p| C64::new(p[0], p[1])).collect()
 }
 
-/// max |a - b| over two complex slices.
+/// max |a - b| over two complex slices. NaN-propagating: `f64::max`
+/// would silently drop NaN diffs, letting corrupted data compare as
+/// 0.0, so any non-finite element poisons the result to NaN (which
+/// fails every `< threshold` assertion).
 pub fn max_abs_diff(a: &[C64], b: &[C64]) -> f64 {
     a.iter()
         .zip(b)
         .map(|(x, y)| (*x - *y).abs())
-        .fold(0.0, f64::max)
+        .fold(0.0, |m, v| if m.is_nan() || v.is_nan() { f64::NAN } else { m.max(v) })
 }
 
 /// max |v| over a complex slice.
@@ -179,5 +182,14 @@ mod tests {
         assert!(C64::new(1.0, 2.0).is_finite());
         assert!(!C64::new(f64::INFINITY, 0.0).is_finite());
         assert!(!C64::new(0.0, f64::NAN).is_finite());
+    }
+
+    #[test]
+    fn max_abs_diff_propagates_nan() {
+        let a = vec![C64::new(f64::NAN, 0.0), C64::new(1.0, 0.0)];
+        let b = vec![C64::ZERO, C64::new(1.0, 0.0)];
+        assert!(max_abs_diff(&a, &b).is_nan());
+        assert!(max_abs_diff(&b, &a).is_nan());
+        assert_eq!(max_abs_diff(&b, &b), 0.0);
     }
 }
