@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# Local CI gate: build, tests, lints, and a 1-iteration hotpath bench
-# smoke (also regenerates BENCH_hotpath.json). Mirrors the tier-1 verify
-# in ROADMAP.md plus clippy.
+# Local CI gate: build, tests, lints, a 1-iteration hotpath bench smoke
+# (also regenerates BENCH_hotpath.json with per-stage histogram columns),
+# and a telemetry smoke: run the serving example briefly and validate the
+# JSON snapshot it writes. Mirrors the tier-1 verify in ROADMAP.md plus
+# clippy.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -9,3 +11,35 @@ cargo build --release
 cargo test -q
 cargo clippy --workspace --all-targets -- -D warnings
 cargo bench --bench hotpath -- --quick
+
+# BENCH_hotpath.json must carry the per-stage histogram section
+python3 - <<'EOF'
+import json
+doc = json.load(open("BENCH_hotpath.json"))
+stages = doc["stages"]
+for stage in ("encode", "verify", "correct", "recompute"):
+    cols = stages[stage]
+    for key in ("count", "p50_ns", "p95_ns", "p99_ns", "max_ns"):
+        assert key in cols, f"BENCH_hotpath.json stages.{stage} missing {key}"
+    assert cols["count"] > 0, f"stages.{stage} recorded no samples"
+print("BENCH_hotpath.json stage columns OK")
+EOF
+
+# Telemetry smoke: needs real artifacts (the serving example executes on
+# the device); skipped on stub-only checkouts.
+if [ -f artifacts/manifest.json ]; then
+  tele_out="$(mktemp)"
+  trap 'rm -f "$tele_out"' EXIT
+  cargo run --release --example serving -- 200 0.5 "$tele_out"
+  python3 - "$tele_out" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+for key in ("counters", "latency", "stages", "spans", "fault_events"):
+    assert key in doc, f"telemetry snapshot missing key {key}"
+assert doc["counters"]["completed"] > 0, "no requests completed"
+assert doc["latency"]["count"] > 0, "latency histogram empty"
+print("telemetry snapshot OK")
+EOF
+else
+  echo "telemetry smoke skipped (no artifacts/manifest.json)"
+fi

@@ -3,7 +3,14 @@
 //! full stack — batcher -> plan router -> PJRT device -> fault manager —
 //! and report latency/throughput like a serving-systems evaluation.
 //!
-//!     cargo run --release --example serving [rate] [secs]
+//!     cargo run --release --example serving [rate] [secs] [telemetry.json]
+//!
+//! After the replay the full telemetry snapshot — counters, end-to-end
+//! latency and per-stage histograms (encode/verify/correct/recompute),
+//! the newest pipeline spans, and the fault-event audit log — is written
+//! as JSON to the third argument (default `telemetry.json`). The same
+//! snapshot is available from the `turbofft` binary via
+//! `--telemetry-out PATH` on the `run`/`serve` subcommands.
 
 use std::time::{Duration, Instant};
 
@@ -18,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let rate: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(300.0);
     let secs: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1.5);
+    let telemetry_path = args.get(2).cloned().unwrap_or_else(|| "telemetry.json".into());
 
     let rt = Runtime::new(&Runtime::default_dir())?;
     let available = rt.manifest.sizes();
@@ -103,6 +111,32 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n{}", coord.metrics.report());
+
+    // pipeline attribution: where batches spent their time
+    let tele = coord.telemetry();
+    println!("\nper-stage time (lock-free histograms):");
+    println!("{:>10} {:>8} {:>9} {:>9} {:>9}", "stage", "count", "p50 us", "p95 us", "max us");
+    for (name, hist) in tele.stages() {
+        let s = hist.snapshot();
+        println!(
+            "{name:>10} {:>8} {:>9.1} {:>9.1} {:>9.1}",
+            s.count(),
+            s.percentile_secs(50.0) * 1e6,
+            s.percentile_secs(95.0) * 1e6,
+            s.max_secs() * 1e6
+        );
+    }
+    println!(
+        "spans recorded: {} ({} retained); fault events: {}",
+        tele.spans.total_recorded(),
+        tele.spans.snapshot().len(),
+        tele.faults.total_recorded()
+    );
+
+    let snapshot = turbofft::telemetry::export::json_snapshot(&coord.metrics);
+    std::fs::write(&telemetry_path, snapshot.to_string())?;
+    println!("telemetry snapshot written to {telemetry_path}");
+
     anyhow::ensure!(ok == events.len(), "dropped requests");
     println!("\nserving OK");
     Ok(())

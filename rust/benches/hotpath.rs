@@ -17,6 +17,7 @@ use turbofft::signal::checksum;
 use turbofft::signal::fft;
 use turbofft::signal::complex::C64;
 use turbofft::signal::plan::{self, FftPlan};
+use turbofft::telemetry::Telemetry;
 use turbofft::util::bench::{self, BenchConfig, BenchResult};
 use turbofft::util::json;
 use turbofft::util::rng::Rng;
@@ -204,6 +205,51 @@ fn main() -> anyhow::Result<()> {
                  naive / planned);
     }
 
+    // Per-stage latency histograms: drive each pipeline stage standalone
+    // and record into the same lock-free atomic histograms the serving
+    // engine uses, so BENCH_hotpath.json carries per-stage
+    // encode/verify/correct/recompute percentile columns.
+    println!("\n== per-stage histograms (telemetry path) ==");
+    let tele = Telemetry::new();
+    let stage_iters = if quick { 3 } else { 200 };
+    let sn = 1024;
+    let sbs = 16;
+    let tile = &sigs[..sbs * sn];
+    let tile_y = &y[..sbs * sn];
+    let p1k = FftPlan::get(sn);
+    let mut enc_scratch = tile.to_vec();
+    let mut corr_buf = tile_y.to_vec();
+    let delta_vec = vec![C64::new(1e-3, -1e-3); sn];
+    for _ in 0..stage_iters {
+        let t0 = std::time::Instant::now();
+        enc_scratch.copy_from_slice(tile);
+        let _ = p1k.transform_encode_inplace(&mut enc_scratch, sbs);
+        tele.stage_encode.record_duration(t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        let _ = checksum::detect_locate_host(tile, tile_y, sn, sbs);
+        tele.stage_verify.record_duration(t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        corr_buf.copy_from_slice(tile_y);
+        checksum::apply_correction(&mut corr_buf, sn, 3, &delta_vec);
+        tele.stage_correct.record_duration(t0.elapsed());
+
+        let t0 = std::time::Instant::now();
+        let _ = plan::fft_batched_par(tile, sn);
+        tele.stage_recompute.record_duration(t0.elapsed());
+    }
+    for (name, h) in tele.stages() {
+        let s = h.snapshot();
+        println!(
+            "{name:>10}: p50 {:>8.1} us  p95 {:>8.1} us  p99 {:>8.1} us  (n={})",
+            s.percentile_secs(50.0) * 1e6,
+            s.percentile_secs(95.0) * 1e6,
+            s.percentile_secs(99.0) * 1e6,
+            s.count()
+        );
+    }
+
     // machine-readable dump
     let entries = json::arr(results.iter().map(|r| {
         json::obj(vec![
@@ -212,8 +258,30 @@ fn main() -> anyhow::Result<()> {
             ("gflops", json::num(r.throughput() / 1e9)),
         ])
     }));
-    let doc = json::obj(vec![("bench", json::s("hotpath")), ("entries", entries)]);
+    let stages = json::obj(
+        tele.stages()
+            .into_iter()
+            .map(|(name, h)| {
+                let s = h.snapshot();
+                (
+                    name,
+                    json::obj(vec![
+                        ("count", json::num(s.count() as f64)),
+                        ("p50_ns", json::num(s.percentile(50.0) as f64)),
+                        ("p95_ns", json::num(s.percentile(95.0) as f64)),
+                        ("p99_ns", json::num(s.percentile(99.0) as f64)),
+                        ("max_ns", json::num(s.max() as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let doc = json::obj(vec![
+        ("bench", json::s("hotpath")),
+        ("entries", entries),
+        ("stages", stages),
+    ]);
     std::fs::write("BENCH_hotpath.json", format!("{doc}\n"))?;
-    println!("\nwrote BENCH_hotpath.json ({} entries)", results.len());
+    println!("\nwrote BENCH_hotpath.json ({} entries + stage histograms)", results.len());
     Ok(())
 }

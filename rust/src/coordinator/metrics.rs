@@ -1,10 +1,15 @@
-//! Serving metrics: counters + latency distribution.
+//! Serving metrics: counters, lock-free latency distribution, and the
+//! telemetry bundle (spans + fault audit log + per-stage histograms).
+//!
+//! The request hot path is mutex-free: `record_latency` is three relaxed
+//! atomic RMWs into a fixed-bucket [`AtomicHistogram`] with O(1) memory
+//! (the previous `Mutex<Summary>` grew a `Vec` forever under serving
+//! load and serialized every responder on one lock).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::util::stats::Summary;
+use crate::telemetry::{AtomicHistogram, HistogramSnapshot, Telemetry};
 
 #[derive(Default)]
 pub struct Metrics {
@@ -18,8 +23,12 @@ pub struct Metrics {
     pub recomputed: AtomicU64,
     pub correction_launches: AtomicU64,
     pub false_locates: AtomicU64,
-    latency: Mutex<Summary>,
-    batch_sizes: Mutex<Summary>,
+    /// spans, fault-event audit log, per-stage histograms
+    pub telemetry: Telemetry,
+    /// end-to-end request latency, nanoseconds
+    latency: AtomicHistogram,
+    /// formed batch sizes (occupied slots)
+    batch_sizes: AtomicHistogram,
 }
 
 impl Metrics {
@@ -27,32 +36,53 @@ impl Metrics {
         Self::default()
     }
 
+    /// Record one request's end-to-end latency. Lock-free.
     pub fn record_latency(&self, d: Duration) {
-        self.latency.lock().unwrap().push(d.as_secs_f64());
+        self.latency.record_duration(d);
     }
 
     pub fn record_batch(&self, size: usize, padded: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_signals.fetch_add(padded as u64, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size as f64);
+        self.batch_sizes.record(size as u64);
     }
 
-    pub fn latency_summary(&self) -> Summary {
-        self.latency.lock().unwrap().clone()
+    /// Point-in-time copy of the latency distribution (ns-valued; use
+    /// `percentile_secs` for seconds).
+    pub fn latency_snapshot(&self) -> HistogramSnapshot {
+        self.latency.snapshot()
+    }
+
+    pub fn batch_size_snapshot(&self) -> HistogramSnapshot {
+        self.batch_sizes.snapshot()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        self.batch_sizes.lock().unwrap().mean()
+        self.batch_sizes.mean()
     }
 
     pub fn report(&self) -> String {
-        let lat = self.latency_summary();
+        let lat = self.latency_snapshot();
         let ms = 1e3;
+        let stage_line = |name: &str, h: &AtomicHistogram| {
+            let s = h.snapshot();
+            if s.is_empty() {
+                format!("{name} -")
+            } else {
+                format!(
+                    "{name} p50 {:.3} ms (x{})",
+                    s.percentile_secs(50.0) * ms,
+                    s.count()
+                )
+            }
+        };
+        let t = &self.telemetry;
         format!(
             "requests: {} submitted, {} completed, {} failed\n\
              batches:  {} formed (mean size {:.1}, {} padded signals)\n\
              faults:   {} detected, {} corrected, {} recomputed, \
-             {} correction launches\n\
+             {} correction launches, {} audit events\n\
+             stages:   {}  {}  {}  {}\n\
              latency:  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  max {:.3} ms",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -64,10 +94,15 @@ impl Metrics {
             self.corrected.load(Ordering::Relaxed),
             self.recomputed.load(Ordering::Relaxed),
             self.correction_launches.load(Ordering::Relaxed),
-            lat.percentile(50.0) * ms,
-            lat.percentile(95.0) * ms,
-            lat.percentile(99.0) * ms,
-            lat.max() * ms,
+            t.faults.total_recorded(),
+            stage_line("encode", &t.stage_encode),
+            stage_line("verify", &t.stage_verify),
+            stage_line("correct", &t.stage_correct),
+            stage_line("recompute", &t.stage_recompute),
+            lat.percentile_secs(50.0) * ms,
+            lat.percentile_secs(95.0) * ms,
+            lat.percentile_secs(99.0) * ms,
+            lat.max_secs() * ms,
         )
     }
 }
@@ -83,10 +118,23 @@ mod tests {
         m.record_latency(Duration::from_millis(2));
         m.record_latency(Duration::from_millis(4));
         m.record_batch(8, 2);
-        let s = m.latency_summary();
-        assert_eq!(s.len(), 2);
-        assert!((s.mean() - 0.003).abs() < 1e-9);
+        let s = m.latency_snapshot();
+        assert_eq!(s.count(), 2);
+        // histogram mean is exact (sum/count of raw ns)
+        assert!((s.mean_secs() - 0.003).abs() < 1e-9);
         assert_eq!(m.mean_batch_size(), 8.0);
         assert!(m.report().contains("p95"));
+        assert!(m.report().contains("stages:"));
+    }
+
+    #[test]
+    fn latency_memory_is_constant() {
+        let m = Metrics::new();
+        let before = m.latency.memory_bytes();
+        for i in 0..10_000u64 {
+            m.record_latency(Duration::from_nanos(1000 + i));
+        }
+        assert_eq!(m.latency.memory_bytes(), before);
+        assert_eq!(m.latency_snapshot().count(), 10_000);
     }
 }

@@ -121,6 +121,11 @@ impl Coordinator {
         })
     }
 
+    /// The telemetry bundle (spans, fault audit log, stage histograms).
+    pub fn telemetry(&self) -> &crate::telemetry::Telemetry {
+        &self.metrics.telemetry
+    }
+
     /// Drain all queues and pending corrections (blocks until done).
     pub fn quiesce(&self) {
         let (tx, rx) = mpsc::channel();

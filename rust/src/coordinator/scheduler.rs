@@ -13,6 +13,12 @@
 //! behind `DeviceHandle` (its own thread), so pack/unpack/judge overlap
 //! with device execution of other batches only through pipelining — the
 //! same single-accelerator regime as the paper's one-GPU experiments.
+//!
+//! Telemetry: each batch opens a root `batch` span with stage children
+//! (`batch_form`, `plan_lookup`, `transform_encode`, `checksum_verify`,
+//! `correct`, `recompute`, `respond`), stage durations feed the lock-free
+//! histograms in `Telemetry`, and every corrected/recomputed tile pushes
+//! a structured `FaultEvent` into the audit log.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -22,6 +28,7 @@ use anyhow::Result;
 use crate::runtime::{DeviceHandle, Entry, HostTensor, InjectionDescriptor, Precision};
 use crate::signal::checksum::{self, Verdict};
 use crate::signal::complex::C64;
+use crate::telemetry::{FaultAction, FaultEvent, SpanId};
 
 use super::batcher::{Batch, Pending};
 use super::ft::{self, CorrectionItem, CorrectionQueue, TileJudgment};
@@ -41,7 +48,7 @@ pub struct EngineConfig {
 }
 
 /// Payload carried through the correction queue: the tile's outputs and
-/// the requests waiting on them.
+/// the requests waiting on them, plus audit-log identity.
 struct TileCtx {
     /// tile outputs, bs*n complex values
     y: Vec<C64>,
@@ -49,6 +56,10 @@ struct TileCtx {
     waiters: Vec<(usize, Pending)>,
     residual: f64,
     corrupted_signal: usize,
+    /// batch sequence number, for the fault-event audit log
+    batch: u64,
+    /// tile index within that batch
+    tile: usize,
 }
 
 pub struct Engine {
@@ -61,6 +72,10 @@ pub struct Engine {
     corrections_since: Option<std::time::Instant>,
     inject: InjectHook,
     batch_seq: u64,
+    /// sequence number of the batch currently in `settle`
+    cur_seq: u64,
+    /// root span of the batch currently being processed
+    cur_root: Option<SpanId>,
 }
 
 impl Engine {
@@ -81,6 +96,8 @@ impl Engine {
             corrections_since: None,
             inject,
             batch_seq: 0,
+            cur_seq: 0,
+            cur_root: None,
         }
     }
 
@@ -106,27 +123,53 @@ impl Engine {
         &mut self,
         batch: Batch,
     ) -> std::result::Result<(), Vec<(String, Vec<Pending>)>> {
+        let metrics = Arc::clone(&self.metrics);
+        let tele = &metrics.telemetry;
         let n = batch.key.n;
         let precision = batch.key.precision;
         let queued = batch.items.len();
-        let plan = match self.router.plan(n, precision) {
+
+        // Root span starts at the earliest submit so the timeline covers
+        // the full request life; batch_form is the queue-wait child.
+        let first_submit = batch
+            .items
+            .iter()
+            .map(|p| tele.spans.instant_ns(p.req.submitted))
+            .min()
+            .unwrap_or_else(|| tele.now_ns());
+        let root = tele.spans.start_at("batch", None, first_submit);
+        let root_id = root.id;
+        self.cur_root = Some(root_id);
+        let form = tele.spans.start_at("batch_form", Some(root_id), first_submit);
+        tele.spans.finish_at(form, tele.spans.instant_ns(batch.formed_at));
+
+        let lookup = tele.spans.start("plan_lookup", Some(root_id));
+        let planned = self.router.plan(n, precision);
+        tele.spans.finish(lookup);
+        let plan = match planned {
             Ok(p) => p,
-            Err(e) => return Err(vec![(e.to_string(), batch.items)]),
+            Err(e) => {
+                tele.spans.finish(root);
+                return Err(vec![(e.to_string(), batch.items)]);
+            }
         };
         let entry = plan.pick(queued).clone();
         let correction_entry = plan.correction.clone();
 
         let seq = self.batch_seq;
         self.batch_seq += 1;
+        self.cur_seq = seq;
         let desc = (self.inject)(seq, &entry);
 
-        match self.execute_and_judge(&entry, &batch, desc) {
+        let out = match self.execute_and_judge(&entry, &batch, desc) {
             Ok((y, judgments, outputs)) => {
                 self.settle(&entry, correction_entry, batch, y, judgments, outputs);
                 Ok(())
             }
             Err(e) => Err(vec![(format!("execute {}: {e}", entry.name), batch.items)]),
-        }
+        };
+        tele.spans.finish(root);
+        out
     }
 
     /// Pack, execute, judge. Returns (complex outputs, per-tile verdicts,
@@ -137,9 +180,13 @@ impl Engine {
         batch: &Batch,
         desc: InjectionDescriptor,
     ) -> Result<(Vec<C64>, Vec<TileJudgment>, Vec<HostTensor>)> {
+        let metrics = Arc::clone(&self.metrics);
+        let tele = &metrics.telemetry;
+
+        let sp = tele.spans.start("transform_encode", self.cur_root);
         let x = pack_batch(entry, batch);
         let padded = entry.batch - batch.items.len();
-        self.metrics.record_batch(batch.items.len(), padded);
+        metrics.record_batch(batch.items.len(), padded);
 
         let mut inputs = vec![x];
         if entry.scheme.takes_descriptor() {
@@ -147,8 +194,16 @@ impl Engine {
         }
         let resp = self.device.execute(&entry.name, inputs)?;
         let y = resp.outputs[0].to_complex()?;
+        let end = tele.spans.now_ns();
+        tele.stage_encode.record(end.saturating_sub(sp.start_ns));
+        tele.spans.finish_at(sp, end);
+
+        let sp = tele.spans.start("checksum_verify", self.cur_root);
         let delta = ft::scaled_delta(self.cfg.delta, entry);
         let judgments = ft::judge_batch(entry, &resp.outputs, delta)?;
+        let end = tele.spans.now_ns();
+        tele.stage_verify.record(end.saturating_sub(sp.start_ns));
+        tele.spans.finish_at(sp, end);
         Ok((y, judgments, resp.outputs))
     }
 
@@ -158,10 +213,11 @@ impl Engine {
         entry: &Entry,
         correction_entry: Option<Entry>,
         batch: Batch,
-        y: Vec<C64>,
+        mut y: Vec<C64>,
         judgments: Vec<TileJudgment>,
         outputs: Vec<HostTensor>,
     ) {
+        let metrics = Arc::clone(&self.metrics);
         let n = entry.n;
         let bs = entry.bs;
         // group pending items by tile
@@ -194,6 +250,7 @@ impl Engine {
             Vec::new()
         };
 
+        let respond_sp = metrics.telemetry.spans.start("respond", self.cur_root);
         let mut recompute_cache: Option<Vec<C64>> = None;
         for (t, waiters) in per_tile.into_iter().enumerate() {
             if waiters.is_empty() {
@@ -207,11 +264,11 @@ impl Engine {
                     } else {
                         FtStatus::Unprotected
                     };
-                    respond_tile(&self.metrics, &y[t * bs * n..(t + 1) * bs * n],
+                    respond_tile(&metrics, &y[t * bs * n..(t + 1) * bs * n],
                                  n, waiters, status, j.residual);
                 }
                 Verdict::Corrupted { signal } => {
-                    self.metrics.faults_detected.fetch_add(1, Ordering::Relaxed);
+                    metrics.faults_detected.fetch_add(1, Ordering::Relaxed);
                     match (&correction_entry, ft::tile_composites(&outputs, n, t)) {
                         (Some(corr), Ok((c2, yc2))) => {
                             let ctx = TileCtx {
@@ -219,6 +276,8 @@ impl Engine {
                                 waiters,
                                 residual: j.residual,
                                 corrupted_signal: signal,
+                                batch: self.cur_seq,
+                                tile: t,
                             };
                             if self.corrections_since.is_none() {
                                 self.corrections_since =
@@ -242,40 +301,81 @@ impl Engine {
                         (None, Ok((c2, yc2))) => {
                             // no correction artifact but composites are
                             // available: apply the delta host-side through
-                            // the cached plan instead of re-executing
+                            // the cached plan, in place on the batch buffer
+                            // (no per-tile copy of the outputs)
+                            let tele = &metrics.telemetry;
+                            let sp = tele.spans.start("correct", self.cur_root);
                             let delta = ft::host_correction_delta(&c2, &yc2);
-                            let mut tile_y = y[t * bs * n..(t + 1) * bs * n].to_vec();
-                            checksum::apply_correction(&mut tile_y, n, signal, &delta);
-                            self.metrics.corrected.fetch_add(1, Ordering::Relaxed);
+                            let lo = t * bs * n;
+                            checksum::apply_correction(
+                                &mut y[lo..lo + bs * n], n, signal, &delta);
+                            tele.copies_saved.fetch_add(1, Ordering::Relaxed);
+                            metrics.corrected.fetch_add(1, Ordering::Relaxed);
+                            let end = tele.spans.now_ns();
+                            tele.stage_correct.record(end.saturating_sub(sp.start_ns));
+                            tele.spans.finish_at(sp, end);
+                            tele.faults.push(FaultEvent {
+                                t_ns: end,
+                                batch: self.cur_seq,
+                                tile: t,
+                                signal: Some(signal),
+                                residual: j.residual,
+                                action: FaultAction::Corrected,
+                                delta_norm: l2_norm(&delta),
+                                injected: None,
+                            });
                             for (slot, p) in waiters {
                                 let status = if slot == signal {
                                     FtStatus::Corrected
                                 } else {
                                     FtStatus::TileCorrected
                                 };
-                                send_response(&self.metrics, &tile_y, n, slot, p,
-                                              status, j.residual);
+                                send_response(&metrics, &y[lo..lo + bs * n],
+                                              n, slot, p, status, j.residual);
                             }
                         }
                         _ => {
                             // composites missing entirely: recompute
+                            push_recompute_event(
+                                &metrics, self.cur_seq, t, Some(signal), j.residual);
                             self.recompute_tile(entry, &mut recompute_cache,
                                                 &x_full, t, waiters, j.residual);
                         }
                     }
                 }
                 Verdict::NeedsRecompute => {
-                    self.metrics.faults_detected.fetch_add(1, Ordering::Relaxed);
+                    metrics.faults_detected.fetch_add(1, Ordering::Relaxed);
+                    push_recompute_event(&metrics, self.cur_seq, t, None, j.residual);
                     self.recompute_tile(entry, &mut recompute_cache,
                                         &x_full, t, waiters, j.residual);
                 }
             }
         }
+        metrics.telemetry.spans.finish(respond_sp);
+    }
+
+    /// Span + stage-histogram wrapper for the recompute path.
+    fn recompute_tile(
+        &mut self,
+        entry: &Entry,
+        cache: &mut Option<Vec<C64>>,
+        x_full: &[C64],
+        tile: usize,
+        waiters: Vec<(usize, Pending)>,
+        residual: f64,
+    ) {
+        let metrics = Arc::clone(&self.metrics);
+        let tele = &metrics.telemetry;
+        let sp = tele.spans.start("recompute", self.cur_root);
+        self.recompute_tile_inner(entry, cache, x_full, tile, waiters, residual);
+        let end = tele.spans.now_ns();
+        tele.stage_recompute.record(end.saturating_sub(sp.start_ns));
+        tele.spans.finish_at(sp, end);
     }
 
     /// Re-execute the packed batch once (injection disabled) and respond
     /// from the clean outputs — the one-sided/time-redundant path.
-    fn recompute_tile(
+    fn recompute_tile_inner(
         &mut self,
         entry: &Entry,
         cache: &mut Option<Vec<C64>>,
@@ -340,6 +440,9 @@ impl Engine {
         corr: &Entry,
         group: ft::CorrectionGroup<TileCtx>,
     ) {
+        let metrics = Arc::clone(&self.metrics);
+        let tele = &metrics.telemetry;
+        let sp = tele.spans.start("correct", self.cur_root);
         let k = self.cfg.correction_k;
         let n = group.n;
         let f64p = group.precision == Precision::F64;
@@ -352,13 +455,16 @@ impl Engine {
             Ok(d) => d,
             Err(e) => {
                 for item in group.items {
-                    fail_all(&self.metrics, item.payload.waiters,
+                    fail_all(&metrics, item.payload.waiters,
                              &format!("correction: {e}"));
                 }
+                let end = tele.spans.now_ns();
+                tele.stage_correct.record(end.saturating_sub(sp.start_ns));
+                tele.spans.finish_at(sp, end);
                 return;
             }
         };
-        self.metrics.correction_launches.fetch_add(1, Ordering::Relaxed);
+        metrics.correction_launches.fetch_add(1, Ordering::Relaxed);
         for (i, item) in group.items.into_iter().enumerate() {
             let mut ctx = item.payload;
             let delta = &deltas[i * n..(i + 1) * n];
@@ -369,7 +475,17 @@ impl Engine {
                     *o += *d;
                 }
             }
-            self.metrics.corrected.fetch_add(1, Ordering::Relaxed);
+            metrics.corrected.fetch_add(1, Ordering::Relaxed);
+            tele.faults.push(FaultEvent {
+                t_ns: tele.now_ns(),
+                batch: ctx.batch,
+                tile: ctx.tile,
+                signal: Some(sig),
+                residual: ctx.residual,
+                action: FaultAction::Corrected,
+                delta_norm: l2_norm(delta),
+                injected: None,
+            });
             let residual = ctx.residual;
             let waiters = std::mem::take(&mut ctx.waiters);
             for (slot, p) in waiters {
@@ -378,9 +494,12 @@ impl Engine {
                 } else {
                     FtStatus::TileCorrected
                 };
-                send_response(&self.metrics, &ctx.y, n, slot, p, status, residual);
+                send_response(&metrics, &ctx.y, n, slot, p, status, residual);
             }
         }
+        let end = tele.spans.now_ns();
+        tele.stage_correct.record(end.saturating_sub(sp.start_ns));
+        tele.spans.finish_at(sp, end);
     }
 
     /// True when pending corrections have waited past `max_age` — the
@@ -398,6 +517,8 @@ impl Engine {
     /// Flush partially filled correction groups (quiet point/shutdown).
     pub fn flush_corrections(&mut self) {
         self.corrections_since = None;
+        // timer/shutdown driven: not inside any batch's root span
+        self.cur_root = None;
         let groups = self.corrections.flush_all();
         for g in groups {
             let corr = self
@@ -420,6 +541,32 @@ impl Engine {
     pub fn pending_corrections(&self) -> usize {
         self.corrections.pending()
     }
+}
+
+/// L2 norm of a complex vector (audit-log delta magnitude).
+fn l2_norm(v: &[C64]) -> f64 {
+    v.iter().map(|c| c.abs2()).sum::<f64>().sqrt()
+}
+
+/// Audit-log entry for a tile headed to the recompute path.
+fn push_recompute_event(
+    metrics: &Metrics,
+    batch: u64,
+    tile: usize,
+    signal: Option<usize>,
+    residual: f64,
+) {
+    let tele = &metrics.telemetry;
+    tele.faults.push(FaultEvent {
+        t_ns: tele.now_ns(),
+        batch,
+        tile,
+        signal,
+        residual,
+        action: FaultAction::Recomputed,
+        delta_norm: 0.0,
+        injected: None,
+    });
 }
 
 /// Pack request signals into the artifact's [batch, n, 2] input,
@@ -526,5 +673,12 @@ mod tests {
         let c = x.to_complex().unwrap();
         assert_eq!(c[0], C64::ONE);
         assert_eq!(c[4], C64::ZERO); // padded
+    }
+
+    #[test]
+    fn l2_norm_basic() {
+        assert_eq!(l2_norm(&[]), 0.0);
+        let v = [C64::new(3.0, 0.0), C64::new(0.0, 4.0)];
+        assert!((l2_norm(&v) - 5.0).abs() < 1e-12);
     }
 }

@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::runtime::{DeviceHandle, Entry, HostTensor, InjectionDescriptor, Precision};
 use crate::signal::checksum::{self, Verdict};
 use crate::signal::complex::C64;
+use crate::telemetry::{events, FaultAction, FaultEvent};
 use crate::util::rng::Rng;
 use crate::workload::signals;
 
@@ -55,9 +56,17 @@ pub struct TrialRecord {
 #[derive(Debug, Default, Clone)]
 pub struct CampaignOutcome {
     pub records: Vec<TrialRecord>,
+    /// structured audit log: one event per trial, with ground truth
+    /// (`injected: Some(..)`) so ROC analysis can run off the log alone
+    pub events: Vec<FaultEvent>,
 }
 
 impl CampaignOutcome {
+    /// JSON-lines audit log of every trial's fault event.
+    pub fn dump_jsonl(&self) -> String {
+        events::dump_jsonl(&self.events)
+    }
+
     pub fn detection_rate(&self) -> f64 {
         let inj: Vec<_> = self.records.iter().filter(|r| r.injected).collect();
         if inj.is_empty() {
@@ -155,6 +164,8 @@ impl<'a> Campaign<'a> {
         // would only add variance; the paper uses random test signals,
         // we refresh every 16 trials to keep runtime sane)
         let mut records = Vec::with_capacity(self.cfg.trials);
+        let mut audit = Vec::with_capacity(self.cfg.trials);
+        let epoch = std::time::Instant::now();
         let mut x = signals::gaussian_batch(&mut rng, entry.batch, n);
         let mut clean_y: Option<Vec<C64>> = None;
 
@@ -223,12 +234,41 @@ impl<'a> Campaign<'a> {
             };
 
             // end-to-end output correctness after correction
-            let output_error = if inject && detected {
+            let (output_error, delta_norm) = if inject && detected {
                 self.corrected_output_error(&x, &outputs, entry, &desc, verdict,
                                             &mut clean_y)?
             } else {
-                0.0
+                (0.0, 0.0)
             };
+
+            // audit-log entry: clean and undetected trials land as
+            // Observed; mislocated detections as FalseLocate
+            let located = match verdict {
+                Verdict::Corrupted { signal } => Some(signal),
+                _ => None,
+            };
+            let action = if !detected {
+                FaultAction::Observed
+            } else {
+                match verdict {
+                    Verdict::Corrupted { signal } if inject && signal != desc.signal => {
+                        FaultAction::FalseLocate
+                    }
+                    Verdict::Corrupted { .. } => FaultAction::Corrected,
+                    Verdict::NeedsRecompute => FaultAction::Recomputed,
+                    Verdict::Clean => FaultAction::Observed,
+                }
+            };
+            audit.push(FaultEvent {
+                t_ns: epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+                batch: trial as u64,
+                tile: tile_idx,
+                signal: located,
+                residual,
+                action,
+                delta_norm,
+                injected: Some(inject),
+            });
 
             records.push(TrialRecord {
                 injected: inject,
@@ -240,7 +280,7 @@ impl<'a> Campaign<'a> {
                 output_error,
             });
         }
-        Ok(CampaignOutcome { records })
+        Ok(CampaignOutcome { records, events: audit })
     }
 
     fn ensure_clean(
@@ -263,7 +303,8 @@ impl<'a> Campaign<'a> {
     }
 
     /// Apply the verdict (additive correction or recompute) and measure
-    /// the residual error against a clean execution.
+    /// the residual error against a clean execution. Returns
+    /// (relative output error, L2 norm of the applied correction delta).
     fn corrected_output_error(
         &self,
         x: &[C64],
@@ -272,7 +313,7 @@ impl<'a> Campaign<'a> {
         desc: &InjectionDescriptor,
         verdict: Verdict,
         clean_cache: &mut Option<Vec<C64>>,
-    ) -> Result<f64> {
+    ) -> Result<(f64, f64)> {
         let n = entry.n;
         if clean_cache.is_none() {
             let f64p = entry.precision == Precision::F64;
@@ -298,15 +339,19 @@ impl<'a> Campaign<'a> {
                 let fc2 = crate::signal::fft::fft(&c2);
                 let delta: Vec<C64> =
                     fc2.iter().zip(&yc2).map(|(a, b)| *a - *b).collect();
+                let delta_norm =
+                    delta.iter().map(|c| c.abs2()).sum::<f64>().sqrt();
                 let base = (tile * bs + signal) * n;
                 for (o, d) in y[base..base + n].iter_mut().zip(&delta) {
                     *o += *d;
                 }
                 let tile_y = &y[tile * bs * n..(tile + 1) * bs * n];
                 let scale = crate::signal::complex::max_abs(tile_clean).max(1e-30);
-                Ok(crate::signal::complex::max_abs_diff(tile_y, tile_clean) / scale)
+                let err =
+                    crate::signal::complex::max_abs_diff(tile_y, tile_clean) / scale;
+                Ok((err, delta_norm))
             }
-            _ => Ok(0.0), // recompute path restores exactly by construction
+            _ => Ok((0.0, 0.0)), // recompute path restores exactly by construction
         }
     }
 }
@@ -334,11 +379,45 @@ mod tests {
                 rec(false, false, false),
                 rec(false, true, false),
             ],
+            events: Vec::new(),
         };
         assert!((o.detection_rate() - 2.0 / 3.0).abs() < 1e-12);
         assert!((o.false_alarm_rate() - 0.5).abs() < 1e-12);
         assert!((o.location_accuracy() - 0.5).abs() < 1e-12);
         assert_eq!(o.labeled_residuals().len(), 5);
+    }
+
+    #[test]
+    fn audit_log_dumps_one_line_per_event() {
+        let o = CampaignOutcome {
+            records: Vec::new(),
+            events: vec![
+                FaultEvent {
+                    t_ns: 1,
+                    batch: 0,
+                    tile: 0,
+                    signal: Some(2),
+                    residual: 0.1,
+                    action: FaultAction::Corrected,
+                    delta_norm: 4.0,
+                    injected: Some(true),
+                },
+                FaultEvent {
+                    t_ns: 2,
+                    batch: 1,
+                    tile: 0,
+                    signal: None,
+                    residual: 1e-8,
+                    action: FaultAction::Observed,
+                    delta_norm: 0.0,
+                    injected: Some(false),
+                },
+            ],
+        };
+        let text = o.dump_jsonl();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.contains("\"injected\":true"));
+        assert!(text.contains("\"action\":\"observed\""));
     }
 
     #[test]

@@ -4,4 +4,4 @@ pub mod campaign;
 pub mod roc;
 
 pub use campaign::{Campaign, CampaignConfig, CampaignOutcome, TrialRecord};
-pub use roc::{roc_curve, RocPoint};
+pub use roc::{labeled_from_events, roc_curve, RocPoint};

@@ -4,11 +4,25 @@
 //! so one campaign's labeled residuals generate the whole ROC curve —
 //! detection rate and false-alarm rate as delta sweeps.
 
+use crate::telemetry::FaultEvent;
+
 #[derive(Debug, Clone, Copy)]
 pub struct RocPoint {
     pub delta: f64,
     pub detection_rate: f64,
     pub false_alarm_rate: f64,
+}
+
+/// Labeled (injected?, residual) samples sourced from a fault-event
+/// audit log. Events without ground truth (`injected: None`, i.e.
+/// production serving events) are skipped — ROC needs labels. For a
+/// campaign's log this reproduces `CampaignOutcome::labeled_residuals`
+/// exactly: every trial records one event carrying its residual.
+pub fn labeled_from_events(events: &[FaultEvent]) -> Vec<(bool, f64)> {
+    events
+        .iter()
+        .filter_map(|e| e.injected.map(|inj| (inj, e.residual)))
+        .collect()
 }
 
 /// Sweep thresholds over labeled residual samples (injected?, residual).
@@ -144,5 +158,47 @@ mod tests {
     fn calibration_picks_zero_fa_threshold() {
         let d = calibrate_delta(&synth(), 0.0);
         assert!(d > 1.2e-6 && d < 1e-3, "d={d}");
+    }
+
+    #[test]
+    fn roc_from_audit_log_matches_direct_samples() {
+        use crate::telemetry::FaultAction;
+        let samples = synth();
+        let events: Vec<FaultEvent> = samples
+            .iter()
+            .enumerate()
+            .map(|(i, &(inj, r))| FaultEvent {
+                t_ns: i as u64,
+                batch: i as u64,
+                tile: 0,
+                signal: None,
+                residual: r,
+                action: if inj { FaultAction::Corrected } else { FaultAction::Observed },
+                delta_norm: 0.0,
+                injected: Some(inj),
+            })
+            .collect();
+        let from_log = labeled_from_events(&events);
+        assert_eq!(from_log, samples);
+        let a = auc(&roc_curve(&from_log, 64));
+        let b = auc(&roc_curve(&samples, 64));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn unlabeled_events_are_skipped() {
+        let mut e = FaultEvent {
+            t_ns: 0,
+            batch: 0,
+            tile: 0,
+            signal: None,
+            residual: 0.5,
+            action: crate::telemetry::FaultAction::Corrected,
+            delta_norm: 0.0,
+            injected: None,
+        };
+        assert!(labeled_from_events(std::slice::from_ref(&e)).is_empty());
+        e.injected = Some(true);
+        assert_eq!(labeled_from_events(&[e]), vec![(true, 0.5)]);
     }
 }

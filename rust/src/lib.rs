@@ -9,5 +9,6 @@ pub mod plan;
 pub mod reports;
 pub mod runtime;
 pub mod signal;
+pub mod telemetry;
 pub mod workload;
 pub mod util;

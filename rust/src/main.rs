@@ -51,7 +51,9 @@ fn usage() -> String {
        inject [--requests 128] [--rate 0.25] [--scheme ft_block]\n\
        bench-figure <table1|fig8..fig21|all> [--quick] [--trials N]\n\
        selftest\n\
-     global: --artifacts DIR (default ./artifacts or $TURBOFFT_ARTIFACTS)\n"
+     global: --artifacts DIR (default ./artifacts or $TURBOFFT_ARTIFACTS)\n\
+             --telemetry-out PATH (run/serve: write the JSON telemetry\n\
+             snapshot; roc: write the fault-event audit log as JSONL)\n"
         .into()
 }
 
@@ -80,6 +82,17 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
 
 fn parse_prec(s: &str) -> Result<Precision> {
     Precision::parse(s).map_err(|e| anyhow!(e))
+}
+
+/// Honor `--telemetry-out PATH`: dump the full JSON telemetry snapshot
+/// (counters, latency + stage histograms, spans, fault events).
+fn write_telemetry(args: &Args, metrics: &turbofft::coordinator::metrics::Metrics) -> Result<()> {
+    if let Some(path) = args.get("telemetry-out") {
+        let doc = turbofft::telemetry::export::json_snapshot(metrics).to_string();
+        std::fs::write(path, doc)?;
+        println!("telemetry snapshot written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_info(dir: &PathBuf) -> Result<()> {
@@ -143,6 +156,7 @@ fn cmd_run(dir: &PathBuf, args: &Args) -> Result<()> {
     }
     println!("{batch} requests complete; worst error vs native FFT: {worst:.3e}");
     println!("{}", coord.metrics.report());
+    write_telemetry(args, &coord.metrics)?;
     if worst > 1e-2 {
         return Err(anyhow!("verification failed"));
     }
@@ -212,6 +226,7 @@ fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
         ok as f64 / wall
     );
     println!("{}", coord.metrics.report());
+    write_telemetry(args, &coord.metrics)?;
     Ok(())
 }
 
@@ -248,6 +263,11 @@ fn cmd_roc(dir: &PathBuf, args: &Args) -> Result<()> {
         100.0 * outcome.false_alarm_rate(),
         100.0 * outcome.location_accuracy()
     );
+    if let Some(path) = args.get("telemetry-out") {
+        std::fs::write(path, outcome.dump_jsonl())?;
+        println!("fault-event audit log written to {path} ({} events)",
+                 outcome.events.len());
+    }
     Ok(())
 }
 

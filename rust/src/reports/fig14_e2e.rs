@@ -150,12 +150,12 @@ fn serving_section(ctx: &ReportCtx) -> Result<String> {
             }
         }
         let elapsed = t0.elapsed().as_secs_f64();
-        let lat = coord.metrics.latency_summary();
+        let lat = coord.metrics.latency_snapshot();
         t.row(vec![
             scheme.to_string(),
             f2(ok as f64 / elapsed),
-            f2(lat.percentile(50.0) * 1e3),
-            f2(lat.percentile(99.0) * 1e3),
+            f2(lat.percentile_secs(50.0) * 1e3),
+            f2(lat.percentile_secs(99.0) * 1e3),
             format!("{verified}/{ok}"),
             format!("batches={}", coord.metrics.batches.load(std::sync::atomic::Ordering::Relaxed)),
         ]);

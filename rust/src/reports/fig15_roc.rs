@@ -40,11 +40,16 @@ pub fn run(ctx: &ReportCtx) -> Result<String> {
         // output beyond roundoff are both undetectable and harmless; the
         // ROC that matters sweeps over SIGNIFICANT faults + clean runs.
         let samples = outcome.labeled_significant_residuals();
-        let all_samples = outcome.labeled_residuals();
+        // the all-faults sweep runs off the structured audit log — the
+        // same events a production fault manager dumps — and must agree
+        // with the in-memory records (asserted in the telemetry suite)
+        let all_samples = roc::labeled_from_events(&outcome.events);
+        debug_assert_eq!(all_samples, outcome.labeled_residuals());
         let curve = roc::roc_curve(&samples, 24);
         let auc = roc::auc(&curve);
         let auc_all = roc::auc(&roc::roc_curve(&all_samples, 24));
         let delta_star = roc::calibrate_delta(&samples, 0.0);
+        ctx.write_raw(&format!("fig15_{plabel}_events.jsonl"), &outcome.dump_jsonl())?;
 
         let mut t = Table::new(&["delta", "detection", "false alarm"]);
         for p in curve.iter().step_by(2) {

@@ -36,6 +36,7 @@ pub fn run(ctx: &ReportCtx, gpu_name: &str) -> Result<String> {
     let mut out = format!(
         "Figs 16/21 (reproduction): serving under error injection ({gpu_name})\n\n"
     );
+    let mut audit: Vec<String> = Vec::new();
     for scheme in [Scheme::FtBlock, Scheme::FtThread, Scheme::OneSided] {
         let clean = run_serving(ctx, scheme, n, requests, 0.0)?;
         let inj = run_serving(ctx, scheme, n, requests, inject_p)?;
@@ -56,8 +57,21 @@ pub fn run(ctx: &ReportCtx, gpu_name: &str) -> Result<String> {
             inj.recomputed.to_string(),
             f2(inj.p99_ms),
         ]);
+        // audit-log coverage: the engine pushes one FaultEvent per
+        // detected tile, so the log must account for every detection
+        audit.push(format!(
+            "{scheme}: {} detections, {} audit events{}",
+            inj.faults_detected,
+            inj.fault_events,
+            if inj.fault_events >= inj.faults_detected { "" } else { " [INCOMPLETE]" },
+        ));
+        ctx.write_raw(&format!("fig16_{scheme}_events.jsonl"), &inj.audit_jsonl)?;
     }
     out.push_str(&t.render());
+    out.push_str("\nfault-event audit log coverage:\n");
+    for line in &audit {
+        out.push_str(&format!("  {line}\n"));
+    }
     out.push_str(
         "\nshape check (paper Figs 16/21): the injected-vs-clean overhead of \
          the two-sided schemes stays in single digits (corrections are \
@@ -75,6 +89,12 @@ struct ServingOutcome {
     corrected: u64,
     recomputed: u64,
     p99_ms: f64,
+    /// detected-fault tiles per the serving counters
+    faults_detected: u64,
+    /// total audit-log events recorded (must cover every detection)
+    fault_events: u64,
+    /// JSON-lines dump of the fault-event audit log
+    audit_jsonl: String,
 }
 
 fn run_serving(
@@ -150,12 +170,16 @@ fn run_serving(
     }
     coord.quiesce();
     let elapsed = t0.elapsed().as_secs_f64();
-    let lat = coord.metrics.latency_summary();
+    let lat = coord.metrics.latency_snapshot();
+    let tele = coord.telemetry();
     Ok(Some(ServingOutcome {
         throughput: ok as f64 / elapsed,
         injections: injections.load(Ordering::Relaxed),
         corrected: coord.metrics.corrected.load(Ordering::Relaxed),
         recomputed: coord.metrics.recomputed.load(Ordering::Relaxed),
-        p99_ms: lat.percentile(99.0) * 1e3,
+        p99_ms: lat.percentile_secs(99.0) * 1e3,
+        faults_detected: coord.metrics.faults_detected.load(Ordering::Relaxed),
+        fault_events: tele.faults.total_recorded(),
+        audit_jsonl: tele.faults.dump_jsonl(),
     }))
 }

@@ -70,6 +70,17 @@ impl<'a> ReportCtx<'a> {
         std::fs::write(format!("bench_results/{name}.csv"), out)?;
         Ok(())
     }
+
+    /// Write a raw artifact (e.g. a JSONL fault audit log) next to the
+    /// CSVs; gated on the same `--csv` flag.
+    pub fn write_raw(&self, filename: &str, contents: &str) -> Result<()> {
+        if !self.csv {
+            return Ok(());
+        }
+        std::fs::create_dir_all("bench_results")?;
+        std::fs::write(format!("bench_results/{filename}"), contents)?;
+        Ok(())
+    }
 }
 
 /// All known figure ids, in paper order.

@@ -24,6 +24,7 @@
 //! stage whose twiddles are all 1.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::checksum::{self, TileMeta};
@@ -53,15 +54,31 @@ fn plan_cache() -> &'static Mutex<HashMap<usize, Arc<FftPlan>>> {
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide plan-cache counters `(hits, misses)`, exported by
+/// `telemetry::export`. A miss means a full table build (twiddles,
+/// bit-reversal, checksum rows), so a nonzero steady-state miss rate
+/// signals an unwarmed or thrashing serving mix.
+pub fn cache_stats() -> (u64, u64) {
+    (
+        CACHE_HITS.load(Ordering::Relaxed),
+        CACHE_MISSES.load(Ordering::Relaxed),
+    )
+}
+
 impl FftPlan {
     /// Fetch (or build and cache) the plan for size `n`.
     pub fn get(n: usize) -> Arc<FftPlan> {
         assert!(n.is_power_of_two(), "fft size {n} not a power of two");
         if let Some(plan) = plan_cache().lock().unwrap().get(&n) {
+            CACHE_HITS.fetch_add(1, Ordering::Relaxed);
             return plan.clone();
         }
         // Build outside the lock; concurrent builders converge on
         // whichever plan lands first.
+        CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
         let plan = Arc::new(FftPlan::build(n));
         plan_cache().lock().unwrap().entry(n).or_insert(plan).clone()
     }

@@ -1,0 +1,212 @@
+//! Fault-event audit log: structured records of every detection and
+//! what the fault manager did about it.
+//!
+//! Replaces the anonymous `corrected`/`recomputed` counters as the
+//! source of truth for fault attribution: each event carries the batch
+//! and tile it hit, the checksum residual that tripped the detector,
+//! the located signal index, the action taken, and the magnitude of the
+//! applied correction delta. Events live in a bounded ring buffer (old
+//! events are overwritten under sustained fault load) and dump as JSON
+//! lines for the campaign/report tooling.
+
+use std::sync::Mutex;
+
+use crate::util::json::{self, Json};
+
+use super::Ring;
+
+/// What the fault manager did with a detected (or audited) tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Residual recorded, nothing detected (campaign audit trail: clean
+    /// trials and undetected injections both land here).
+    Observed,
+    /// Located and additively corrected (delayed batched correction or
+    /// the host-side delta path).
+    Corrected,
+    /// Detected but not correctable: the tile was re-executed.
+    Recomputed,
+    /// Ground truth says the locator picked the wrong signal (only
+    /// known in injection campaigns).
+    FalseLocate,
+}
+
+impl FaultAction {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultAction::Observed => "observed",
+            FaultAction::Corrected => "corrected",
+            FaultAction::Recomputed => "recomputed",
+            FaultAction::FalseLocate => "false_locate",
+        }
+    }
+
+    /// True for actions that represent a tripped detector.
+    pub fn detected(&self) -> bool {
+        !matches!(self, FaultAction::Observed)
+    }
+}
+
+/// One structured audit record.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    /// wall time, ns since the telemetry epoch
+    pub t_ns: u64,
+    /// batch sequence number (serving) or trial index (campaigns)
+    pub batch: u64,
+    /// tile index within the batch
+    pub tile: usize,
+    /// located in-tile signal index (None: detection without location)
+    pub signal: Option<usize>,
+    /// relative checksum residual that was judged
+    pub residual: f64,
+    pub action: FaultAction,
+    /// max-abs magnitude of the applied correction delta (0 when none)
+    pub delta_norm: f64,
+    /// ground-truth injection label when known (campaigns only)
+    pub injected: Option<bool>,
+}
+
+impl FaultEvent {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("t_ns", json::num(self.t_ns as f64)),
+            ("batch", json::num(self.batch as f64)),
+            ("tile", json::num(self.tile as f64)),
+            (
+                "signal",
+                match self.signal {
+                    Some(s) => json::num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("residual", json::num(self.residual)),
+            ("action", json::s(self.action.as_str())),
+            ("delta_norm", json::num(self.delta_norm)),
+        ];
+        if let Some(inj) = self.injected {
+            pairs.push(("injected", Json::Bool(inj)));
+        }
+        json::obj(pairs)
+    }
+}
+
+/// Bounded, thread-safe ring of fault events.
+///
+/// Pushes happen at fault granularity (rare by construction), so a
+/// mutex here never touches the clean-request hot path.
+pub struct FaultLog {
+    ring: Mutex<Ring<FaultEvent>>,
+}
+
+impl Default for FaultLog {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+impl FaultLog {
+    pub fn new(capacity: usize) -> Self {
+        Self { ring: Mutex::new(Ring::new(capacity)) }
+    }
+
+    pub fn push(&self, ev: FaultEvent) {
+        self.ring.lock().unwrap().push(ev);
+    }
+
+    /// Retained events, oldest first.
+    pub fn snapshot(&self) -> Vec<FaultEvent> {
+        self.ring.lock().unwrap().snapshot()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever pushed (monotonic across wraparound).
+    pub fn total_recorded(&self) -> u64 {
+        self.ring.lock().unwrap().total()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().capacity()
+    }
+
+    /// JSON-lines dump of the retained events (one object per line).
+    pub fn dump_jsonl(&self) -> String {
+        dump_jsonl(&self.snapshot())
+    }
+}
+
+/// JSON-lines serialization of a slice of events.
+pub fn dump_jsonl(events: &[FaultEvent]) -> String {
+    let mut out = String::with_capacity(events.len() * 96);
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(batch: u64, action: FaultAction) -> FaultEvent {
+        FaultEvent {
+            t_ns: batch * 10,
+            batch,
+            tile: 1,
+            signal: Some(3),
+            residual: 0.25,
+            action,
+            delta_norm: 1.5,
+            injected: Some(true),
+        }
+    }
+
+    #[test]
+    fn wraparound_keeps_newest() {
+        let log = FaultLog::new(8);
+        for i in 0..20 {
+            log.push(ev(i, FaultAction::Corrected));
+        }
+        assert_eq!(log.len(), 8);
+        assert_eq!(log.total_recorded(), 20);
+        let snap = log.snapshot();
+        let batches: Vec<u64> = snap.iter().map(|e| e.batch).collect();
+        assert_eq!(batches, (12..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn jsonl_roundtrips_through_parser() {
+        let log = FaultLog::new(4);
+        log.push(ev(7, FaultAction::Recomputed));
+        let mut e2 = ev(8, FaultAction::Observed);
+        e2.signal = None;
+        e2.injected = None;
+        log.push(e2);
+        let text = log.dump_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("action").unwrap().as_str(), Some("recomputed"));
+        assert_eq!(v.get("batch").unwrap().as_usize(), Some(7));
+        assert_eq!(v.get("signal").unwrap().as_usize(), Some(3));
+        let v2 = json::parse(lines[1]).unwrap();
+        assert_eq!(v2.get("signal"), Some(&Json::Null));
+        assert!(v2.get("injected").is_none());
+    }
+
+    #[test]
+    fn action_detected_split() {
+        assert!(!FaultAction::Observed.detected());
+        assert!(FaultAction::Corrected.detected());
+        assert!(FaultAction::Recomputed.detected());
+        assert!(FaultAction::FalseLocate.detected());
+    }
+}

@@ -1,0 +1,254 @@
+//! Telemetry exporters: Prometheus text exposition + JSON snapshot.
+//!
+//! Both read the same sources — the serving counters, the lock-free
+//! latency/stage histograms, the span ring, and the fault-event audit
+//! log — and are safe to call from any thread while serving continues
+//! (reads are relaxed-atomic snapshots; no exporter ever blocks the
+//! request path).
+
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::metrics::Metrics;
+use crate::signal::plan;
+use crate::util::json::{self, Json};
+
+use super::histogram::HistogramSnapshot;
+
+/// Quantiles exported for every histogram.
+const QUANTILES: [(f64, &str); 3] = [(50.0, "0.5"), (95.0, "0.95"), (99.0, "0.99")];
+
+/// How many of the most recent spans / fault events the JSON snapshot
+/// embeds (the full rings stay queryable in-process).
+const SNAPSHOT_TAIL: usize = 64;
+
+fn counter_list(m: &Metrics) -> Vec<(&'static str, u64)> {
+    let t = &m.telemetry;
+    vec![
+        ("submitted", m.submitted.load(Ordering::Relaxed)),
+        ("completed", m.completed.load(Ordering::Relaxed)),
+        ("failed", m.failed.load(Ordering::Relaxed)),
+        ("batches", m.batches.load(Ordering::Relaxed)),
+        ("padded_signals", m.padded_signals.load(Ordering::Relaxed)),
+        ("faults_detected", m.faults_detected.load(Ordering::Relaxed)),
+        ("corrected", m.corrected.load(Ordering::Relaxed)),
+        ("recomputed", m.recomputed.load(Ordering::Relaxed)),
+        ("correction_launches", m.correction_launches.load(Ordering::Relaxed)),
+        ("false_locates", m.false_locates.load(Ordering::Relaxed)),
+        ("copies_saved", t.copies_saved()),
+        ("spans_recorded", t.spans.total_recorded()),
+        ("fault_events_recorded", t.faults.total_recorded()),
+    ]
+}
+
+/// Prometheus text exposition (one scrape body).
+pub fn prometheus(m: &Metrics) -> String {
+    let mut out = String::with_capacity(2048);
+    for (name, v) in counter_list(m) {
+        out.push_str(&format!(
+            "# TYPE turbofft_{name}_total counter\nturbofft_{name}_total {v}\n"
+        ));
+    }
+    let (hits, misses) = plan::cache_stats();
+    out.push_str(&format!(
+        "# TYPE turbofft_plan_cache_hits_total counter\n\
+         turbofft_plan_cache_hits_total {hits}\n\
+         # TYPE turbofft_plan_cache_misses_total counter\n\
+         turbofft_plan_cache_misses_total {misses}\n"
+    ));
+
+    let lat = m.latency_snapshot();
+    out.push_str("# TYPE turbofft_latency_seconds summary\n");
+    for (q, label) in QUANTILES {
+        out.push_str(&format!(
+            "turbofft_latency_seconds{{quantile=\"{label}\"}} {}\n",
+            lat.percentile_secs(q)
+        ));
+    }
+    out.push_str(&format!(
+        "turbofft_latency_seconds_sum {}\nturbofft_latency_seconds_count {}\n",
+        lat.sum() as f64 * 1e-9,
+        lat.count()
+    ));
+
+    out.push_str("# TYPE turbofft_stage_seconds summary\n");
+    for (stage, hist) in m.telemetry.stages() {
+        let s = hist.snapshot();
+        for (q, label) in QUANTILES {
+            out.push_str(&format!(
+                "turbofft_stage_seconds{{stage=\"{stage}\",quantile=\"{label}\"}} {}\n",
+                s.percentile_secs(q)
+            ));
+        }
+        out.push_str(&format!(
+            "turbofft_stage_seconds_sum{{stage=\"{stage}\"}} {}\n\
+             turbofft_stage_seconds_count{{stage=\"{stage}\"}} {}\n",
+            s.sum() as f64 * 1e-9,
+            s.count()
+        ));
+    }
+
+    let bs = m.batch_size_snapshot();
+    out.push_str(&format!(
+        "# TYPE turbofft_batch_size summary\n\
+         turbofft_batch_size{{quantile=\"0.5\"}} {}\n\
+         turbofft_batch_size_sum {}\nturbofft_batch_size_count {}\n",
+        bs.percentile(50.0),
+        bs.sum(),
+        bs.count()
+    ));
+    out
+}
+
+/// JSON of a nanosecond-valued histogram, reported in seconds.
+fn hist_secs_json(s: &HistogramSnapshot) -> Json {
+    json::obj(vec![
+        ("count", json::num(s.count() as f64)),
+        ("mean", json::num(s.mean_secs())),
+        ("p50", json::num(s.percentile_secs(50.0))),
+        ("p95", json::num(s.percentile_secs(95.0))),
+        ("p99", json::num(s.percentile_secs(99.0))),
+        ("max", json::num(s.max_secs())),
+    ])
+}
+
+/// Full JSON snapshot: counters, latency + per-stage histograms, the
+/// newest spans, and the newest fault events.
+pub fn json_snapshot(m: &Metrics) -> Json {
+    let t = &m.telemetry;
+    let counters = json::obj(
+        counter_list(m).into_iter().map(|(k, v)| (k, json::num(v as f64))).collect(),
+    );
+    let stages = json::obj(
+        t.stages()
+            .into_iter()
+            .map(|(name, h)| (name, hist_secs_json(&h.snapshot())))
+            .collect(),
+    );
+    let bs = m.batch_size_snapshot();
+    let batch_size = json::obj(vec![
+        ("count", json::num(bs.count() as f64)),
+        ("mean", json::num(bs.mean())),
+        ("p50", json::num(bs.percentile(50.0) as f64)),
+        ("max", json::num(bs.max() as f64)),
+    ]);
+    let spans = t.spans.snapshot();
+    let span_tail = spans[spans.len().saturating_sub(SNAPSHOT_TAIL)..].iter().map(|s| {
+        json::obj(vec![
+            ("id", json::num(s.id as f64)),
+            (
+                "parent",
+                match s.parent {
+                    Some(p) => json::num(p as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("name", json::s(s.name)),
+            ("start_ns", json::num(s.start_ns as f64)),
+            ("end_ns", json::num(s.end_ns as f64)),
+        ])
+    });
+    let events = t.faults.snapshot();
+    let event_tail = events[events.len().saturating_sub(SNAPSHOT_TAIL)..]
+        .iter()
+        .map(|e| e.to_json());
+    let (hits, misses) = plan::cache_stats();
+    json::obj(vec![
+        ("counters", counters),
+        ("latency", hist_secs_json(&m.latency_snapshot())),
+        ("stages", stages),
+        ("batch_size", batch_size),
+        ("spans", json::arr(span_tail)),
+        ("fault_events", json::arr(event_tail)),
+        (
+            "plan_cache",
+            json::obj(vec![
+                ("hits", json::num(hits as f64)),
+                ("misses", json::num(misses as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Keys every JSON snapshot must carry (checked by the CI smoke step).
+pub const SNAPSHOT_REQUIRED_KEYS: [&str; 5] =
+    ["counters", "latency", "stages", "spans", "fault_events"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{FaultAction, FaultEvent};
+    use std::time::Duration;
+
+    fn populated_metrics() -> Metrics {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(2));
+        m.record_latency(Duration::from_millis(4));
+        m.record_batch(8, 2);
+        m.telemetry.stage_encode.record_duration(Duration::from_micros(100));
+        m.telemetry.stage_verify.record_duration(Duration::from_micros(10));
+        let root = m.telemetry.spans.start("batch", None);
+        let child = m.telemetry.spans.start("transform_encode", Some(root.id));
+        m.telemetry.spans.finish(child);
+        m.telemetry.spans.finish(root);
+        m.telemetry.faults.push(FaultEvent {
+            t_ns: 123,
+            batch: 0,
+            tile: 1,
+            signal: Some(2),
+            residual: 0.5,
+            action: FaultAction::Corrected,
+            delta_norm: 3.0,
+            injected: None,
+        });
+        m
+    }
+
+    #[test]
+    fn prometheus_golden_lines() {
+        let m = populated_metrics();
+        let text = prometheus(&m);
+        assert!(text.contains("# TYPE turbofft_submitted_total counter"));
+        assert!(text.contains("turbofft_submitted_total 3"));
+        assert!(text.contains("turbofft_latency_seconds_count 2"));
+        assert!(text.contains("turbofft_latency_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("turbofft_stage_seconds{stage=\"encode\",quantile=\"0.5\"}"));
+        assert!(text.contains("turbofft_stage_seconds_count{stage=\"encode\"} 1"));
+        assert!(text.contains("turbofft_fault_events_recorded_total 1"));
+        assert!(text.contains("turbofft_batch_size_count 1"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_with_required_keys() {
+        let m = populated_metrics();
+        let doc = json_snapshot(&m).to_string();
+        let v = json::parse(&doc).expect("snapshot is valid JSON");
+        for key in SNAPSHOT_REQUIRED_KEYS {
+            assert!(v.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(
+            v.get("counters").unwrap().get("submitted").unwrap().as_usize(),
+            Some(3)
+        );
+        let lat = v.get("latency").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_usize(), Some(2));
+        // p50 of {2ms, 4ms} sits within a bucket of one of them
+        let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+        assert!(p50 > 1e-3 && p50 < 5e-3, "p50={p50}");
+        let spans = v.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[1].get("name").unwrap().as_str(), Some("batch"));
+        let events = v.get("fault_events").unwrap().as_arr().unwrap();
+        assert_eq!(events[0].get("action").unwrap().as_str(), Some("corrected"));
+    }
+
+    #[test]
+    fn empty_metrics_export_cleanly() {
+        let m = Metrics::new();
+        let text = prometheus(&m);
+        assert!(text.contains("turbofft_latency_seconds_count 0"));
+        let v = json::parse(&json_snapshot(&m).to_string()).unwrap();
+        assert_eq!(v.get("latency").unwrap().get("count").unwrap().as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,319 @@
+//! Lock-free fixed-bucket log-scale histogram for hot-path timing.
+//!
+//! The serving metrics used to funnel every request latency through a
+//! `Mutex<Summary>` that grew an unbounded `Vec` — a lock on the hot
+//! path and O(requests) memory. `AtomicHistogram` replaces it: a fixed
+//! array of `AtomicU64` buckets on a log2 scale with 16 sub-buckets per
+//! octave (HdrHistogram-style), so `record` is a single `fetch_add` and
+//! percentile queries read a snapshot. Relative quantile error is
+//! bounded by the sub-bucket width: at most 1/16 ≈ 6.25% (half that for
+//! the midpoint representative), which is far below run-to-run latency
+//! noise. Memory is O(1): `BUCKETS` counters regardless of sample count.
+//!
+//! Values are plain `u64`s; time-valued histograms store nanoseconds
+//! (see [`AtomicHistogram::record_duration`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Values 0..16 get exact unit buckets; above that, each power of two
+/// splits into 16 sub-buckets. 64-bit values need (64-4) octaves.
+const UNIT: usize = 16;
+const SUBS: usize = 16;
+pub const BUCKETS: usize = UNIT + (64 - 4) * SUBS; // 976
+
+/// Map a value to its bucket index.
+fn bucket_index(v: u64) -> usize {
+    if v < UNIT as u64 {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros() as usize; // e >= 4
+    let sub = ((v >> (e - 4)) & 0xF) as usize; // 4 bits below the top one
+    UNIT + (e - 4) * SUBS + sub
+}
+
+/// Lower bound of a bucket's value range (inverse of `bucket_index`).
+fn bucket_lo(idx: usize) -> u64 {
+    if idx < UNIT {
+        return idx as u64;
+    }
+    let e = 4 + (idx - UNIT) / SUBS;
+    let sub = ((idx - UNIT) % SUBS) as u64;
+    (1u64 << e) + (sub << (e - 4))
+}
+
+/// Midpoint representative of a bucket (used for percentile reads).
+fn bucket_mid(idx: usize) -> u64 {
+    if idx < UNIT {
+        return idx as u64;
+    }
+    let e = 4 + (idx - UNIT) / SUBS;
+    let width = 1u64 << (e - 4);
+    bucket_lo(idx) + width / 2
+}
+
+/// A thread-safe histogram: all mutation is relaxed atomics, no locks.
+pub struct AtomicHistogram {
+    buckets: Box<[AtomicU64; BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> Self {
+        // `AtomicU64` is not Copy; build the boxed array via a Vec.
+        let v: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        let buckets: Box<[AtomicU64; BUCKETS]> = match v.into_boxed_slice().try_into() {
+            Ok(b) => b,
+            Err(_) => unreachable!("Vec built with BUCKETS elements"),
+        };
+        Self {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. Lock-free: three relaxed RMWs plus a max.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Exact arithmetic mean (sum and count are exact counters).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// Fixed memory footprint in bytes — constant for the lifetime of
+    /// the histogram regardless of how many samples were recorded (the
+    /// O(1)-memory guarantee the old `Mutex<Summary>` lacked).
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + BUCKETS * std::mem::size_of::<AtomicU64>()
+    }
+
+    /// Fold another histogram into this one (cross-thread merge).
+    pub fn merge(&self, other: &AtomicHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+    }
+
+    /// Consistent point-in-time copy for percentile queries and export.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        // Derive count from the bucket sum so the snapshot is internally
+        // consistent even if a concurrent record landed between loads.
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            buckets,
+            count,
+            sum: self.sum(),
+            max: self.max(),
+        }
+    }
+
+    /// Convenience: percentile straight off a fresh snapshot.
+    pub fn percentile(&self, q: f64) -> u64 {
+        self.snapshot().percentile(q)
+    }
+}
+
+/// Non-atomic copy of a histogram's state.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Percentile `q` in [0, 100]: the midpoint of the bucket holding
+    /// the rank-`q` sample. The true max is tracked exactly, so
+    /// `percentile(100.0)` returns it rather than a bucket bound.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if q >= 100.0 {
+            return self.max;
+        }
+        let rank = (q.max(0.0) / 100.0 * (self.count as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_mid(idx).min(self.max.max(bucket_lo(idx)));
+            }
+        }
+        self.max
+    }
+
+    /// Percentile of a nanosecond-valued histogram, in seconds.
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        self.percentile(q) as f64 * 1e-9
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean() * 1e-9
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_bounds() {
+        for v in [0u64, 1, 7, 15, 16, 17, 100, 1023, 1024, 123_456_789,
+                  u64::MAX / 2, u64::MAX] {
+            let idx = bucket_index(v);
+            let lo = bucket_lo(idx);
+            assert!(lo <= v, "v={v} idx={idx} lo={lo}");
+            if idx + 1 < BUCKETS {
+                assert!(bucket_lo(idx + 1) > v, "v={v} idx={idx}");
+            }
+        }
+        // bucket lower bounds are strictly increasing
+        for i in 1..BUCKETS {
+            assert!(bucket_lo(i) > bucket_lo(i - 1), "i={i}");
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = AtomicHistogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 16);
+        assert_eq!(s.percentile(0.0), 0);
+        assert_eq!(s.percentile(100.0), 15);
+        assert_eq!(h.max(), 15);
+        assert_eq!(h.sum(), (0..16).sum::<u64>());
+    }
+
+    #[test]
+    fn relative_error_within_bucket_bound() {
+        let h = AtomicHistogram::new();
+        let vals: Vec<u64> = (0..10_000u64).map(|i| 1_000 + i * 137).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        for q in [10.0, 50.0, 90.0, 95.0, 99.0] {
+            let exact =
+                sorted[((q / 100.0) * (sorted.len() - 1) as f64).round() as usize];
+            let approx = s.percentile(q);
+            let rel = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.0725, "q={q}: exact={exact} approx={approx} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let a = AtomicHistogram::new();
+        let b = AtomicHistogram::new();
+        for v in 0..100u64 {
+            a.record(v * 10);
+            b.record(v * 1000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), 99_000);
+        let s = a.snapshot();
+        assert_eq!(s.count(), 200);
+        assert!(s.percentile(99.0) > 90_000 / 2);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        use std::sync::Arc;
+        let h = Arc::new(AtomicHistogram::new());
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record(t * 1_000_000 + i);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+        assert_eq!(h.snapshot().count(), 40_000);
+    }
+}

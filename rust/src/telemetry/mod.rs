@@ -1,0 +1,166 @@
+//! End-to-end telemetry: tracing spans, fault-event audit log, and
+//! lock-free histograms (see `docs/telemetry.md`).
+//!
+//! The paper's value claim is quantitative — minimum FT overhead even
+//! under hundreds of error injections per minute — so the reproduction
+//! must be able to attribute latency to checksum encode vs. detect vs.
+//! correction and audit which tiles were corrected vs. recomputed and
+//! why. This module is that instrumentation layer:
+//!
+//! - [`span::SpanRecorder`] — per-batch pipeline timelines
+//!   (submit → batch-form → plan-lookup → transform+encode →
+//!   checksum-verify → correct/recompute → respond);
+//! - [`events::FaultLog`] — bounded ring of structured [`events::FaultEvent`]
+//!   records replacing anonymous counters;
+//! - [`histogram::AtomicHistogram`] — fixed-bucket log-scale atomic
+//!   histograms (no mutex, O(1) memory) for hot-path latency recording;
+//! - [`export`] — Prometheus text exposition and JSON snapshots.
+
+pub mod events;
+pub mod export;
+pub mod histogram;
+pub mod span;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub use events::{FaultAction, FaultEvent, FaultLog};
+pub use histogram::{AtomicHistogram, HistogramSnapshot};
+pub use span::{ActiveSpan, Span, SpanId, SpanRecorder};
+
+/// A bounded ring buffer: fixed capacity, overwrites oldest, tracks the
+/// total ever pushed so wraparound is observable.
+pub(crate) struct Ring<T> {
+    buf: Vec<T>,
+    cap: usize,
+    /// index of the oldest element once the ring is full
+    start: usize,
+    total: u64,
+}
+
+impl<T: Clone> Ring<T> {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self { buf: Vec::with_capacity(cap), cap, start: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, v: T) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.start] = v;
+            self.start = (self.start + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Elements oldest-first.
+    pub fn snapshot(&self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.start..]);
+        out.extend_from_slice(&self.buf[..self.start]);
+        out
+    }
+}
+
+/// The telemetry bundle owned by the serving metrics: one span recorder,
+/// one fault log, and per-stage latency histograms shared by every
+/// pipeline thread.
+pub struct Telemetry {
+    pub spans: SpanRecorder,
+    pub faults: FaultLog,
+    /// transform + fused checksum encode (pack + device execute)
+    pub stage_encode: AtomicHistogram,
+    /// checksum residual judging
+    pub stage_verify: AtomicHistogram,
+    /// additive correction (host delta or batched correction launch)
+    pub stage_correct: AtomicHistogram,
+    /// time-redundant re-execution
+    pub stage_recompute: AtomicHistogram,
+    /// per-tile output copies avoided by correcting in place on the
+    /// batch buffer (ROADMAP item: no `to_vec` in the host-correction arm)
+    pub copies_saved: AtomicU64,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::with_capacity(4096, 4096)
+    }
+
+    pub fn with_capacity(span_cap: usize, event_cap: usize) -> Self {
+        Self {
+            spans: SpanRecorder::new(span_cap),
+            faults: FaultLog::new(event_cap),
+            stage_encode: AtomicHistogram::new(),
+            stage_verify: AtomicHistogram::new(),
+            stage_correct: AtomicHistogram::new(),
+            stage_recompute: AtomicHistogram::new(),
+            copies_saved: AtomicU64::new(0),
+        }
+    }
+
+    /// Nanoseconds since the telemetry epoch (the span clock).
+    pub fn now_ns(&self) -> u64 {
+        self.spans.now_ns()
+    }
+
+    pub fn copies_saved(&self) -> u64 {
+        self.copies_saved.load(Ordering::Relaxed)
+    }
+
+    /// The per-stage histograms with their export names.
+    pub fn stages(&self) -> [(&'static str, &AtomicHistogram); 4] {
+        [
+            ("encode", &self.stage_encode),
+            ("verify", &self.stage_verify),
+            ("correct", &self.stage_correct),
+            ("recompute", &self.stage_recompute),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_snapshot_order() {
+        let mut r: Ring<u32> = Ring::new(3);
+        assert_eq!(r.len(), 0);
+        r.push(1);
+        r.push(2);
+        assert_eq!(r.snapshot(), vec![1, 2]);
+        r.push(3);
+        r.push(4);
+        r.push(5);
+        assert_eq!(r.snapshot(), vec![3, 4, 5]);
+        assert_eq!(r.total(), 5);
+        assert_eq!(r.capacity(), 3);
+    }
+
+    #[test]
+    fn telemetry_stage_names() {
+        let t = Telemetry::new();
+        let names: Vec<&str> = t.stages().iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["encode", "verify", "correct", "recompute"]);
+        t.stage_encode.record(10);
+        assert_eq!(t.stages()[0].1.count(), 1);
+    }
+}

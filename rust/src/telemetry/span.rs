@@ -1,0 +1,198 @@
+//! Lightweight tracing spans for the serving pipeline.
+//!
+//! Zero-dependency span recorder: monotonic clock (offsets from a
+//! per-recorder epoch), parent/child span ids, and a bounded ring of
+//! completed spans. The engine opens one root span per batch and child
+//! spans per pipeline stage (see `docs/telemetry.md` for the taxonomy):
+//!
+//!   batch
+//!     ├─ batch_form        queue wait: first submit -> batch formed
+//!     ├─ plan_lookup       router/plan resolution
+//!     ├─ transform_encode  pack + device execute (FFT + checksum encode)
+//!     ├─ checksum_verify   residual judging of every tile
+//!     ├─ correct           host-side or batched additive correction
+//!     ├─ recompute         time-redundant re-execution
+//!     └─ respond           verdict fan-out to waiting requests
+//!
+//! Spans are completed-interval records (start is cheap and local; the
+//! ring lock is taken once per *finished span*, i.e. a handful of times
+//! per batch — never per request). Timeline queries read `snapshot()`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::Ring;
+
+pub type SpanId = u64;
+
+/// A completed pipeline span. Times are nanoseconds since the
+/// recorder's epoch (its creation instant).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: SpanId,
+    pub parent: Option<SpanId>,
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Span {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// An open span: holds its identity until `SpanRecorder::finish`.
+#[derive(Debug)]
+pub struct ActiveSpan {
+    pub id: SpanId,
+    pub parent: Option<SpanId>,
+    pub name: &'static str,
+    pub start_ns: u64,
+}
+
+/// Records spans into a bounded ring buffer.
+pub struct SpanRecorder {
+    epoch: Instant,
+    next_id: AtomicU64,
+    ring: Mutex<Ring<Span>>,
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+impl SpanRecorder {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            ring: Mutex::new(Ring::new(capacity)),
+        }
+    }
+
+    /// Nanoseconds since this recorder's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Convert an externally captured `Instant` (e.g. a request's submit
+    /// time) to this recorder's clock. Instants before the epoch map to 0.
+    pub fn instant_ns(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_nanos().min(u64::MAX as u128) as u64)
+            .unwrap_or(0)
+    }
+
+    /// Open a span starting now.
+    pub fn start(&self, name: &'static str, parent: Option<SpanId>) -> ActiveSpan {
+        self.start_at(name, parent, self.now_ns())
+    }
+
+    /// Open a span with an explicit start time (queue-wait spans start at
+    /// the submit instant, before the engine ever saw the batch).
+    pub fn start_at(
+        &self,
+        name: &'static str,
+        parent: Option<SpanId>,
+        start_ns: u64,
+    ) -> ActiveSpan {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        ActiveSpan { id, parent, name, start_ns }
+    }
+
+    /// Close a span now and record it.
+    pub fn finish(&self, span: ActiveSpan) -> SpanId {
+        let end = self.now_ns();
+        self.finish_at(span, end)
+    }
+
+    /// Close a span at an explicit end time and record it.
+    pub fn finish_at(&self, span: ActiveSpan, end_ns: u64) -> SpanId {
+        let id = span.id;
+        let rec = Span {
+            id,
+            parent: span.parent,
+            name: span.name,
+            start_ns: span.start_ns,
+            end_ns: end_ns.max(span.start_ns),
+        };
+        self.ring.lock().unwrap().push(rec);
+        id
+    }
+
+    /// Completed spans currently retained, in completion order.
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.ring.lock().unwrap().snapshot()
+    }
+
+    /// Total spans ever recorded (monotonic, survives ring wraparound).
+    pub fn total_recorded(&self) -> u64 {
+        self.ring.lock().unwrap().total()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_monotonic() {
+        let r = SpanRecorder::new(16);
+        let a = r.start("a", None);
+        let b = r.start("b", Some(a.id));
+        assert!(b.id > a.id);
+        let bid = r.finish(b);
+        let aid = r.finish(a);
+        assert_ne!(aid, bid);
+        let spans = r.snapshot();
+        assert_eq!(spans.len(), 2);
+        // completion order: b finished first
+        assert_eq!(spans[0].name, "b");
+        assert_eq!(spans[0].parent, Some(aid));
+    }
+
+    #[test]
+    fn child_interval_nested_in_parent() {
+        let r = SpanRecorder::new(16);
+        let root = r.start("batch", None);
+        let child = r.start("transform_encode", Some(root.id));
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        r.finish(child);
+        r.finish(root);
+        let spans = r.snapshot();
+        let parent = spans.iter().find(|s| s.name == "batch").unwrap();
+        let kid = spans.iter().find(|s| s.name == "transform_encode").unwrap();
+        assert!(kid.start_ns >= parent.start_ns);
+        assert!(kid.end_ns <= parent.end_ns);
+        assert!(kid.duration_ns() > 0);
+    }
+
+    #[test]
+    fn explicit_times_clamp_sanely() {
+        let r = SpanRecorder::new(4);
+        let s = r.start_at("batch_form", None, 1000);
+        r.finish_at(s, 500); // end before start -> clamped to start
+        let spans = r.snapshot();
+        assert_eq!(spans[0].start_ns, 1000);
+        assert_eq!(spans[0].end_ns, 1000);
+    }
+
+    #[test]
+    fn ring_bounds_retention() {
+        let r = SpanRecorder::new(4);
+        for _ in 0..10 {
+            let s = r.start("x", None);
+            r.finish(s);
+        }
+        assert_eq!(r.snapshot().len(), 4);
+        assert_eq!(r.total_recorded(), 10);
+    }
+}

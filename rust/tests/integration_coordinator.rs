@@ -219,6 +219,74 @@ fn onesided_scheme_recomputes() {
 }
 
 #[test]
+fn audit_log_covers_every_detection() {
+    let Some(rt) = runtime() else { return };
+    let n = smallest_n(rt);
+    let hook: InjectHook = {
+        let mut rng = Rng::new(0xF03);
+        Box::new(move |seq, entry| {
+            if seq % 2 == 0 {
+                let mut d = Campaign::random_descriptor(&mut rng, entry);
+                d.bit = 31;
+                d.stage = 0;
+                d.tile = 0;
+                d.signal = rng.below(entry.bs.min(8));
+                d
+            } else {
+                InjectionDescriptor::NONE
+            }
+        })
+    };
+    let coord = Coordinator::new(rt, Config {
+        scheme: Scheme::FtBlock,
+        delta: 2e-4,
+        policy: BatchPolicy {
+            target_batch: 8,
+            max_delay: std::time::Duration::from_millis(1),
+        },
+        inject: Some(hook),
+    })
+    .unwrap();
+    let mut rng = Rng::new(27);
+    let (inputs, results) = submit_many(&coord, &mut rng, n, 48);
+    let (worst, _) = check_all(&inputs, results);
+    coord.quiesce();
+    assert!(worst < 1e-2, "worst {worst}");
+
+    let detected = coord.metrics.faults_detected.load(Ordering::Relaxed);
+    let tele = coord.telemetry();
+    assert!(detected > 0, "campaign produced no detections");
+    // the engine pushes exactly one FaultEvent per detected tile
+    assert_eq!(
+        tele.faults.total_recorded(),
+        detected,
+        "audit log does not cover every detection"
+    );
+    // every serving event is an action on a detection (never Observed)
+    // and parses back out of the JSONL dump
+    let dump = tele.faults.dump_jsonl();
+    let mut parsed = 0;
+    for line in dump.lines() {
+        let v = turbofft::util::json::parse(line).expect("audit line is JSON");
+        let action = v.get("action").unwrap().as_str().unwrap();
+        assert_ne!(action, "observed", "serving log should only hold detections");
+        assert!(v.get("residual").unwrap().as_f64().unwrap() > 0.0);
+        parsed += 1;
+    }
+    assert_eq!(parsed as u64, tele.faults.total_recorded().min(
+        tele.faults.capacity() as u64));
+
+    // pipeline spans were recorded for the batches we ran
+    let spans = tele.spans.snapshot();
+    assert!(spans.iter().any(|s| s.name == "batch"));
+    assert!(spans.iter().any(|s| s.name == "transform_encode"));
+    assert!(spans.iter().any(|s| s.name == "checksum_verify"));
+    // stage histograms saw the same traffic
+    assert!(tele.stage_encode.count() > 0);
+    assert!(tele.stage_verify.count() > 0);
+}
+
+#[test]
 fn noft_scheme_reports_unprotected() {
     let Some(rt) = runtime() else { return };
     let n = smallest_n(rt);

@@ -1,0 +1,277 @@
+//! Telemetry subsystem tests: span nesting/ordering, histogram accuracy
+//! against the exact `Summary`, O(1)-memory latency recording, fault-log
+//! ring wraparound, exporter goldens, and ROC-from-audit-log parity.
+//! None of these need device artifacts — they run on every checkout.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use turbofft::coordinator::metrics::Metrics;
+use turbofft::faults::roc;
+use turbofft::telemetry::{
+    export, AtomicHistogram, FaultAction, FaultEvent, FaultLog, SpanRecorder,
+};
+use turbofft::util::json;
+use turbofft::util::rng::Rng;
+use turbofft::util::stats::Summary;
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+#[test]
+fn span_tree_nests_and_orders() {
+    let r = SpanRecorder::new(64);
+    let root = r.start("batch", None);
+    let root_id = root.id;
+    for name in ["batch_form", "plan_lookup", "transform_encode",
+                 "checksum_verify", "respond"] {
+        let child = r.start(name, Some(root_id));
+        r.finish(child);
+    }
+    r.finish(root);
+    let spans = r.snapshot();
+    assert_eq!(spans.len(), 6);
+    // the root completes last
+    assert_eq!(spans.last().unwrap().name, "batch");
+    let parent = spans.last().unwrap();
+    for child in &spans[..5] {
+        assert_eq!(child.parent, Some(parent.id));
+        assert!(child.start_ns >= parent.start_ns);
+        assert!(child.end_ns <= parent.end_ns);
+    }
+    // children completed in issue order with monotonic ids
+    for pair in spans[..5].windows(2) {
+        assert!(pair[1].id > pair[0].id);
+        assert!(pair[1].end_ns >= pair[0].end_ns);
+    }
+}
+
+#[test]
+fn span_ring_wraps_but_total_is_monotonic() {
+    let r = SpanRecorder::new(8);
+    for i in 0..50 {
+        let s = r.start(if i % 2 == 0 { "batch" } else { "respond" }, None);
+        r.finish(s);
+    }
+    assert_eq!(r.snapshot().len(), 8);
+    assert_eq!(r.total_recorded(), 50);
+}
+
+// ---------------------------------------------------------------------------
+// histograms
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_percentiles_track_exact_summary() {
+    // the lock-free histogram must agree with the exact Vec-backed
+    // Summary within its documented sub-bucket error bound (~6.25% + mid)
+    let h = AtomicHistogram::new();
+    let mut exact = Summary::default();
+    let mut rng = Rng::new(404);
+    for _ in 0..50_000 {
+        // log-uniform latencies from ~1us to ~100ms, in ns
+        let u = rng.below(1_000_000) as f64 / 1_000_000.0;
+        let v = (1_000.0 * (100_000_000.0f64 / 1_000.0).powf(u)) as u64;
+        h.record(v);
+        exact.push(v as f64);
+    }
+    let s = h.snapshot();
+    for q in [10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0] {
+        let want = exact.percentile(q);
+        let got = s.percentile(q) as f64;
+        let rel = (got - want).abs() / want;
+        assert!(rel < 0.0725, "q={q}: exact={want} hist={got} rel={rel}");
+    }
+    // max is tracked exactly, not bucketed
+    assert_eq!(s.percentile(100.0) as f64, exact.percentile(100.0));
+}
+
+#[test]
+fn record_latency_memory_is_o1_across_a_million_records() {
+    // satellite regression: the old Mutex<Summary> grew 8 bytes per
+    // request; the histogram's footprint must not move at all
+    let m = Metrics::new();
+    let h = AtomicHistogram::new();
+    let before = h.memory_bytes();
+    for i in 0..1_000_000u64 {
+        m.record_latency(Duration::from_nanos(500 + (i % 100_000)));
+        h.record(500 + (i % 100_000));
+    }
+    assert_eq!(h.memory_bytes(), before, "histogram footprint grew");
+    assert_eq!(h.count(), 1_000_000);
+    let snap = m.latency_snapshot();
+    assert_eq!(snap.count(), 1_000_000);
+    // sanity: the footprint is a few KB, not O(records)
+    assert!(before < 64 * 1024, "footprint {before} bytes");
+}
+
+#[test]
+fn histogram_merge_matches_single_stream() {
+    let a = AtomicHistogram::new();
+    let b = AtomicHistogram::new();
+    let whole = AtomicHistogram::new();
+    let mut rng = Rng::new(7);
+    for i in 0..20_000u64 {
+        let v = 100 + rng.below(1_000_000) as u64;
+        if i % 2 == 0 { a.record(v) } else { b.record(v) }
+        whole.record(v);
+    }
+    a.merge(&b);
+    let sa = a.snapshot();
+    let sw = whole.snapshot();
+    assert_eq!(sa.count(), sw.count());
+    assert_eq!(sa.max(), sw.max());
+    for q in [50.0, 95.0, 99.0] {
+        assert_eq!(sa.percentile(q), sw.percentile(q), "q={q}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault log
+// ---------------------------------------------------------------------------
+
+fn ev(batch: u64, residual: f64, action: FaultAction, injected: Option<bool>) -> FaultEvent {
+    FaultEvent {
+        t_ns: batch,
+        batch,
+        tile: (batch % 4) as usize,
+        signal: Some((batch % 8) as usize),
+        residual,
+        action,
+        delta_norm: residual * 2.0,
+        injected,
+    }
+}
+
+#[test]
+fn fault_log_wraparound_keeps_newest_events() {
+    let log = FaultLog::new(16);
+    for i in 0..100 {
+        log.push(ev(i, 0.5, FaultAction::Corrected, None));
+    }
+    assert_eq!(log.len(), 16);
+    assert_eq!(log.total_recorded(), 100);
+    let snap = log.snapshot();
+    assert_eq!(snap.first().unwrap().batch, 84);
+    assert_eq!(snap.last().unwrap().batch, 99);
+    assert_eq!(log.dump_jsonl().lines().count(), 16);
+}
+
+#[test]
+fn roc_from_audit_log_matches_direct_computation() {
+    // synthetic campaign: clean residuals ~1e-6, injected ~1e-3
+    let mut direct: Vec<(bool, f64)> = Vec::new();
+    let mut events: Vec<FaultEvent> = Vec::new();
+    for i in 0..400u64 {
+        let injected = i % 2 == 0;
+        let residual = if injected {
+            1e-3 * (1.0 + (i % 5) as f64 / 10.0)
+        } else {
+            1e-6 * (1.0 + (i % 7) as f64 / 10.0)
+        };
+        direct.push((injected, residual));
+        let action = if injected { FaultAction::Corrected } else { FaultAction::Observed };
+        events.push(ev(i, residual, action, Some(injected)));
+    }
+    let from_log = roc::labeled_from_events(&events);
+    assert_eq!(from_log, direct);
+    let c1 = roc::roc_curve(&from_log, 48);
+    let c2 = roc::roc_curve(&direct, 48);
+    assert_eq!(roc::auc(&c1), roc::auc(&c2));
+    for (p1, p2) in c1.iter().zip(&c2) {
+        assert_eq!(p1.detection_rate, p2.detection_rate);
+        assert_eq!(p1.false_alarm_rate, p2.false_alarm_rate);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// exporters
+// ---------------------------------------------------------------------------
+
+fn populated_metrics() -> Metrics {
+    let m = Metrics::new();
+    m.submitted.fetch_add(10, Ordering::Relaxed);
+    m.completed.fetch_add(9, Ordering::Relaxed);
+    m.faults_detected.fetch_add(2, Ordering::Relaxed);
+    m.corrected.fetch_add(2, Ordering::Relaxed);
+    for i in 0..9u64 {
+        m.record_latency(Duration::from_micros(100 + i * 10));
+    }
+    m.record_batch(8, 0);
+    m.telemetry.stage_encode.record_duration(Duration::from_micros(80));
+    m.telemetry.stage_verify.record_duration(Duration::from_micros(8));
+    m.telemetry.stage_correct.record_duration(Duration::from_micros(30));
+    m.telemetry.copies_saved.fetch_add(2, Ordering::Relaxed);
+    let root = m.telemetry.spans.start("batch", None);
+    let child = m.telemetry.spans.start("transform_encode", Some(root.id));
+    m.telemetry.spans.finish(child);
+    m.telemetry.spans.finish(root);
+    m.telemetry.faults.push(ev(3, 0.4, FaultAction::Corrected, None));
+    m.telemetry.faults.push(ev(5, 0.9, FaultAction::Recomputed, None));
+    m
+}
+
+#[test]
+fn prometheus_export_golden() {
+    let text = export::prometheus(&populated_metrics());
+    for needle in [
+        "# TYPE turbofft_submitted_total counter",
+        "turbofft_submitted_total 10",
+        "turbofft_completed_total 9",
+        "turbofft_copies_saved_total 2",
+        "turbofft_fault_events_recorded_total 2",
+        "turbofft_latency_seconds{quantile=\"0.5\"}",
+        "turbofft_latency_seconds{quantile=\"0.99\"}",
+        "turbofft_latency_seconds_count 9",
+        "turbofft_stage_seconds{stage=\"encode\",quantile=\"0.95\"}",
+        "turbofft_stage_seconds_count{stage=\"correct\"} 1",
+        "turbofft_stage_seconds_count{stage=\"recompute\"} 0",
+        "turbofft_batch_size_count 1",
+        "# TYPE turbofft_plan_cache_hits_total counter",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+}
+
+#[test]
+fn json_snapshot_golden() {
+    let m = populated_metrics();
+    let doc = export::json_snapshot(&m).to_string();
+    let v = json::parse(&doc).expect("valid JSON");
+    for key in export::SNAPSHOT_REQUIRED_KEYS {
+        assert!(v.get(key).is_some(), "missing {key}");
+    }
+    let counters = v.get("counters").unwrap();
+    assert_eq!(counters.get("submitted").unwrap().as_usize(), Some(10));
+    assert_eq!(counters.get("copies_saved").unwrap().as_usize(), Some(2));
+    let lat = v.get("latency").unwrap();
+    assert_eq!(lat.get("count").unwrap().as_usize(), Some(9));
+    let p50 = lat.get("p50").unwrap().as_f64().unwrap();
+    assert!(p50 > 50e-6 && p50 < 250e-6, "p50={p50}");
+    let stages = v.get("stages").unwrap();
+    for stage in ["encode", "verify", "correct", "recompute"] {
+        assert!(stages.get(stage).is_some(), "missing stage {stage}");
+    }
+    assert_eq!(
+        stages.get("recompute").unwrap().get("count").unwrap().as_usize(),
+        Some(0)
+    );
+    let spans = v.get("spans").unwrap().as_arr().unwrap();
+    assert_eq!(spans.len(), 2);
+    assert_eq!(spans[0].get("name").unwrap().as_str(), Some("transform_encode"));
+    let events = v.get("fault_events").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 2);
+    assert_eq!(events[1].get("action").unwrap().as_str(), Some("recomputed"));
+}
+
+#[test]
+fn report_string_covers_stages_and_latency() {
+    let m = populated_metrics();
+    let report = m.report();
+    assert!(report.contains("latency:"));
+    assert!(report.contains("stages:"));
+    assert!(report.contains("encode p50"));
+    assert!(report.contains("recompute -"), "empty stage shows a dash");
+    assert!(report.contains("2 audit events"));
+}
