@@ -25,6 +25,61 @@ for stage in ("encode", "verify", "correct", "recompute"):
 print("BENCH_hotpath.json stage columns OK")
 EOF
 
+# Server smoke: start the HTTP front end on an ephemeral port (it falls
+# back to the host-plan backend on stub-only checkouts, so this runs
+# everywhere), drive it with loadgen for ~1s, then validate /metrics,
+# /trace.json, /snapshot.json and /healthz from the live listener.
+# The --secs watchdog guarantees the background server can never outlive
+# this script even if a step below fails.
+srv_dir="$(mktemp -d)"
+cargo run --release -- serve --listen 127.0.0.1:0 --secs 30 \
+  --port-file "$srv_dir/port" --trace-out "$srv_dir/trace.json" &
+srv_pid=$!
+for _ in $(seq 1 100); do
+  [ -s "$srv_dir/port" ] && break
+  sleep 0.1
+done
+if [ ! -s "$srv_dir/port" ]; then
+  echo "server smoke FAILED: no port file written"
+  kill "$srv_pid" 2>/dev/null || true
+  exit 1
+fi
+port="$(cat "$srv_dir/port")"
+
+cargo run --release --example loadgen -- --addr "127.0.0.1:$port" \
+  --rate 200 --secs 1 --n 256 --max-error-rate 0.01
+
+python3 - "$port" <<'EOF'
+import json, sys, urllib.request
+base = f"http://127.0.0.1:{sys.argv[1]}"
+metrics = urllib.request.urlopen(f"{base}/metrics", timeout=5).read().decode()
+assert "turbofft_completed_total" in metrics, metrics[:400]
+assert "turbofft_server_accepted_total" in metrics, metrics[:400]
+trace = json.load(urllib.request.urlopen(f"{base}/trace.json", timeout=5))
+assert trace["traceEvents"], "live /trace.json has no span events"
+snap = json.load(urllib.request.urlopen(f"{base}/snapshot.json", timeout=5))
+assert snap["counters"]["completed"] > 0, "no requests completed over HTTP"
+assert urllib.request.urlopen(f"{base}/healthz", timeout=5).status == 200
+print("server smoke OK: /metrics /trace.json /snapshot.json /healthz live")
+EOF
+
+# graceful shutdown via the admin route; the drained server then flushes
+# the --trace-out dump, which must parse
+python3 - "$port" <<'EOF'
+import sys, urllib.request
+url = f"http://127.0.0.1:{sys.argv[1]}/admin/shutdown"
+req = urllib.request.Request(url, data=b"", method="POST")
+print(urllib.request.urlopen(req, timeout=5).read().decode())
+EOF
+wait "$srv_pid"
+python3 - "$srv_dir/trace.json" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert "traceEvents" in doc
+print(f"--trace-out dump OK ({len(doc['traceEvents'])} events)")
+EOF
+rm -rf "$srv_dir"
+
 # Telemetry smoke: needs real artifacts (the serving example executes on
 # the device); skipped on stub-only checkouts.
 if [ -f artifacts/manifest.json ]; then

@@ -1,0 +1,320 @@
+//! Loopback load generator for the `turbofft serve --listen` HTTP front
+//! end: open-loop Poisson arrivals (the serving-paper default, so queue
+//! delay shows up in the latency tail instead of throttling the client)
+//! or closed-loop back-to-back mode, printing p50/p95/p99 and exiting
+//! non-zero when the error rate crosses a threshold — which is how
+//! `ci.sh` uses it as a smoke gate.
+//!
+//!     # terminal 1
+//!     cargo run --release -- serve --listen 127.0.0.1:7070
+//!     # terminal 2
+//!     cargo run --release --example loadgen -- --addr 127.0.0.1:7070 \
+//!         --rate 200 --secs 2 --n 256 --batch 2
+//!
+//! `--rate 0` switches to closed-loop: `--conns` connections each issue
+//! requests back-to-back for `--secs`. With a fixed worker pool the
+//! open-loop mode is the standard practical compromise: arrivals behind
+//! schedule fire immediately rather than being dropped.
+//!
+//! Std-only by design (the image vendors no HTTP client): the ~60-line
+//! keep-alive client below speaks exactly the Content-Length subset the
+//! server emits.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use turbofft::util::cli::Args;
+use turbofft::util::rng::Rng;
+use turbofft::util::stats::Summary;
+
+/// Open-loop arrival plan: Poisson offsets, a shared claim cursor, and
+/// the common start instant. `None` means closed-loop.
+type Schedule = Option<(Arc<Vec<f64>>, Arc<AtomicUsize>, Instant)>;
+
+struct WorkerReport {
+    latencies_ms: Vec<f64>,
+    ok: u64,
+    /// non-200 responses and transport failures, keyed by status
+    /// (0 = connect/read/write error)
+    errors: BTreeMap<u16, u64>,
+}
+
+/// One keep-alive connection to the server.
+struct Client {
+    addr: String,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl Client {
+    fn new(addr: &str) -> Self {
+        Self { addr: addr.to_string(), conn: None }
+    }
+
+    /// POST `body` to `path`; returns the response status. Reconnects
+    /// once on a stale keep-alive connection.
+    fn post(&mut self, path: &str, body: &str) -> std::io::Result<u16> {
+        for attempt in 0..2 {
+            if self.conn.is_none() {
+                let s = TcpStream::connect(&self.addr)?;
+                s.set_nodelay(true)?;
+                s.set_read_timeout(Some(Duration::from_secs(10)))?;
+                self.conn = Some(BufReader::new(s));
+            }
+            match self.roundtrip(path, body) {
+                Ok(status) => return Ok(status),
+                Err(e) if attempt == 0 => {
+                    // server closed the keep-alive connection (drain,
+                    // keep_alive_max, timeout): reconnect and retry once
+                    self.conn = None;
+                    let _ = e;
+                }
+                Err(e) => {
+                    self.conn = None;
+                    return Err(e);
+                }
+            }
+        }
+        unreachable!()
+    }
+
+    fn roundtrip(&mut self, path: &str, body: &str) -> std::io::Result<u16> {
+        let conn = self.conn.as_mut().unwrap();
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nhost: turbofft\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+            body.len()
+        );
+        let stream = conn.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+
+        let mut status_line = String::new();
+        if conn.read_line(&mut status_line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before response",
+            ));
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad status line {status_line:?}"),
+                )
+            })?;
+        let mut content_length = 0usize;
+        let mut close = false;
+        loop {
+            let mut line = String::new();
+            conn.read_line(&mut line)?;
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                match k.trim().to_ascii_lowercase().as_str() {
+                    "content-length" => {
+                        content_length = v.trim().parse().map_err(|_| {
+                            std::io::Error::new(
+                                std::io::ErrorKind::InvalidData,
+                                "bad content-length",
+                            )
+                        })?;
+                    }
+                    "connection" if v.trim().eq_ignore_ascii_case("close") => {
+                        close = true;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        conn.read_exact(&mut body)?;
+        if close {
+            self.conn = None;
+        }
+        Ok(status)
+    }
+}
+
+/// Deterministic request body: `batch` real signals of length `n`.
+fn make_body(rng: &mut Rng, batch: usize, n: usize) -> String {
+    let mut out = String::with_capacity(batch * n * 10 + 32);
+    out.push_str("{\"signals\":[");
+    for b in 0..batch {
+        if b > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for j in 0..n {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{:.5}", rng.gaussian()));
+        }
+        out.push(']');
+    }
+    out.push_str("]}");
+    out
+}
+
+fn worker(
+    addr: &str,
+    schedule: Schedule,
+    secs: f64,
+    batch: usize,
+    n: usize,
+    seed: u64,
+) -> WorkerReport {
+    let mut rng = Rng::new(seed);
+    let mut client = Client::new(addr);
+    let mut rep = WorkerReport {
+        latencies_ms: Vec::new(),
+        ok: 0,
+        errors: BTreeMap::new(),
+    };
+    let until = Instant::now() + Duration::from_secs_f64(secs);
+    loop {
+        match &schedule {
+            // open loop: claim the next Poisson arrival and fire at it
+            Some((offsets, next, start)) => {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= offsets.len() {
+                    break;
+                }
+                let target = *start + Duration::from_secs_f64(offsets[i]);
+                if let Some(sleep) = target.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(sleep);
+                }
+            }
+            // closed loop: back-to-back until the clock runs out
+            None => {
+                if Instant::now() >= until {
+                    break;
+                }
+            }
+        }
+        let body = make_body(&mut rng, batch, n);
+        let t0 = Instant::now();
+        match client.post("/v1/fft", &body) {
+            Ok(200) => {
+                rep.ok += 1;
+                rep.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(status) => *rep.errors.entry(status).or_insert(0) += 1,
+            Err(_) => *rep.errors.entry(0).or_insert(0) += 1,
+        }
+    }
+    rep
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).unwrap_or_default();
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let rate = args.f64_or("rate", 200.0).unwrap_or(200.0);
+    let secs = args.f64_or("secs", 1.0).unwrap_or(1.0);
+    let conns = args.usize_or("conns", 4).unwrap_or(4).max(1);
+    let batch = args.usize_or("batch", 1).unwrap_or(1).max(1);
+    let n = args.usize_or("n", 256).unwrap_or(256);
+    let max_error_rate = args.f64_or("max-error-rate", 0.01).unwrap_or(0.01);
+    let seed = args.u64_or("seed", 1).unwrap_or(1);
+
+    let schedule: Schedule = if rate > 0.0 {
+        // precompute Poisson arrival offsets for the whole run
+        let mut rng = Rng::new(seed ^ 0x9e37);
+        let mut offsets = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(rate);
+            if t >= secs {
+                break;
+            }
+            offsets.push(t);
+        }
+        println!(
+            "loadgen: open-loop {} arrivals over {secs}s (~{rate}/s) on {conns} conns, batch {batch} x n={n}",
+            offsets.len()
+        );
+        Some((Arc::new(offsets), Arc::new(AtomicUsize::new(0)), Instant::now()))
+    } else {
+        println!(
+            "loadgen: closed-loop {conns} conns for {secs}s, batch {batch} x n={n}"
+        );
+        None
+    };
+
+    let reports: Vec<WorkerReport> = std::thread::scope(|scope| {
+        (0..conns)
+            .map(|c| {
+                let addr = addr.clone();
+                let schedule = schedule.clone();
+                scope.spawn(move || {
+                    worker(&addr, schedule, secs, batch, n, seed + c as u64)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    });
+
+    let mut lat = Summary::new();
+    let mut ok = 0u64;
+    let mut errors: BTreeMap<u16, u64> = BTreeMap::new();
+    for r in &reports {
+        ok += r.ok;
+        for &v in &r.latencies_ms {
+            lat.push(v);
+        }
+        for (&status, &count) in &r.errors {
+            *errors.entry(status).or_insert(0) += count;
+        }
+    }
+    let err_total: u64 = errors.values().sum();
+    let total = ok + err_total;
+    let error_rate = if total == 0 { 1.0 } else { err_total as f64 / total as f64 };
+
+    println!(
+        "loadgen: {ok} ok, {err_total} errors ({:.2}% of {total}) -> {:.0} req/s ok",
+        100.0 * error_rate,
+        ok as f64 / secs
+    );
+    if !lat.is_empty() {
+        println!(
+            "latency ms: p50 {:.3}  p95 {:.3}  p99 {:.3}  max {:.3}",
+            lat.percentile(50.0),
+            lat.percentile(95.0),
+            lat.percentile(99.0),
+            lat.max()
+        );
+    }
+    if !errors.is_empty() {
+        let parts: Vec<String> = errors
+            .iter()
+            .map(|(s, c)| {
+                if *s == 0 {
+                    format!("transport x{c}")
+                } else {
+                    format!("{s} x{c}")
+                }
+            })
+            .collect();
+        println!("errors by status: {}", parts.join(", "));
+    }
+    if error_rate > max_error_rate {
+        eprintln!(
+            "loadgen: error rate {:.2}% exceeds threshold {:.2}%",
+            100.0 * error_rate,
+            100.0 * max_error_rate
+        );
+        std::process::exit(1);
+    }
+}

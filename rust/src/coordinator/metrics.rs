@@ -23,6 +23,15 @@ pub struct Metrics {
     pub recomputed: AtomicU64,
     pub correction_launches: AtomicU64,
     pub false_locates: AtomicU64,
+    /// HTTP front end: requests parsed and dispatched to a route
+    pub server_accepted: AtomicU64,
+    /// HTTP front end: connections shed at admission (429)
+    pub server_shed: AtomicU64,
+    /// HTTP front end: deadline/timeout rejections (queue-wait 503,
+    /// backend 504, slow-loris 408)
+    pub server_timed_out: AtomicU64,
+    /// HTTP front end: malformed or oversized requests (400, 413)
+    pub server_malformed: AtomicU64,
     /// spans, fault-event audit log, per-stage histograms
     pub telemetry: Telemetry,
     /// end-to-end request latency, nanoseconds

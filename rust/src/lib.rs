@@ -8,6 +8,7 @@ pub mod perfmodel;
 pub mod plan;
 pub mod reports;
 pub mod runtime;
+pub mod server;
 pub mod signal;
 pub mod telemetry;
 pub mod workload;

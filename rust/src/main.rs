@@ -4,7 +4,8 @@
 //! Subcommands:
 //!   info                      manifest + platform summary
 //!   run                       one FFT through the runtime, verified
-//!   serve                     replay a Poisson trace through the coordinator
+//!   serve                     replay a Poisson trace through the coordinator,
+//!                             or (with --listen) serve FFTs over HTTP
 //!   roc                       detector calibration campaign (Fig 15 data)
 //!   inject                    serving under live error injection
 //!   bench-figure <id|all>     regenerate a paper table/figure
@@ -47,13 +48,19 @@ fn usage() -> String {
        info                         manifest + platform summary\n\
        run    [--n 1024] [--prec f32] [--scheme ft_block] [--batch 16]\n\
        serve  [--rate 500] [--secs 1.0] [--scheme ft_block] [--delta 2e-4]\n\
+              [--listen ADDR]  serve FFTs over HTTP instead of replaying\n\
+              a trace (see docs/server.md): --workers 4 --queue 128\n\
+              --max-body BYTES --deadline-ms 2000 --port-file PATH\n\
+              --secs N (0 = run until POST /admin/shutdown)\n\
        roc    [--trials 400] [--n 1024] [--prec f32]\n\
        inject [--requests 128] [--rate 0.25] [--scheme ft_block]\n\
        bench-figure <table1|fig8..fig21|all> [--quick] [--trials N]\n\
        selftest\n\
      global: --artifacts DIR (default ./artifacts or $TURBOFFT_ARTIFACTS)\n\
              --telemetry-out PATH (run/serve: write the JSON telemetry\n\
-             snapshot; roc: write the fault-event audit log as JSONL)\n"
+             snapshot; roc: write the fault-event audit log as JSONL)\n\
+             --trace-out PATH (serve: write the Chrome trace_event dump\n\
+             of the span ring, openable in chrome://tracing / Perfetto)\n"
         .into()
 }
 
@@ -163,7 +170,21 @@ fn cmd_run(dir: &PathBuf, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Honor `--trace-out PATH`: dump the span ring as Chrome trace_event
+/// JSON (openable in `chrome://tracing` or Perfetto).
+fn write_trace(args: &Args, metrics: &turbofft::coordinator::metrics::Metrics) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        let doc = turbofft::telemetry::export::chrome_trace(metrics).to_string();
+        std::fs::write(path, doc)?;
+        println!("chrome trace written to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_http(dir, args);
+    }
     let rate = args.f64_or("rate", 500.0).map_err(|e| anyhow!(e))?;
     let secs = args.f64_or("secs", 1.0).map_err(|e| anyhow!(e))?;
     let delta = args.f64_or("delta", 2e-4).map_err(|e| anyhow!(e))?;
@@ -227,6 +248,76 @@ fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
     );
     println!("{}", coord.metrics.report());
     write_telemetry(args, &coord.metrics)?;
+    write_trace(args, &coord.metrics)?;
+    Ok(())
+}
+
+/// `serve --listen ADDR`: put the coordinator on a TCP socket (see
+/// `docs/server.md` for the wire protocol). Falls back to the cached
+/// host plan with checksum verification when no device artifacts are
+/// present, so the HTTP surface works on stub-only checkouts too.
+fn cmd_serve_http(dir: &PathBuf, args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+    use turbofft::server::{
+        CoordinatorBackend, FftBackend, HostPlanBackend, Server, ServerConfig,
+    };
+
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0").to_string();
+    let delta = args.f64_or("delta", 2e-4).map_err(|e| anyhow!(e))?;
+    let scheme = Scheme::parse(&args.str_or("scheme", "ft_block")).map_err(|e| anyhow!(e))?;
+    let secs = args.f64_or("secs", 0.0).map_err(|e| anyhow!(e))?;
+    let cfg = ServerConfig {
+        workers: args.usize_or("workers", 4).map_err(|e| anyhow!(e))?,
+        queue_cap: args.usize_or("queue", 128).map_err(|e| anyhow!(e))?,
+        max_body: args
+            .usize_or("max-body", 2 * 1024 * 1024)
+            .map_err(|e| anyhow!(e))?,
+        deadline: args.duration_ms_or("deadline-ms", 2000).map_err(|e| anyhow!(e))?,
+        ..Default::default()
+    };
+
+    let backend: Arc<dyn FftBackend> = match Runtime::new(dir) {
+        Ok(rt) => {
+            let coord = Coordinator::new(&rt, Config {
+                scheme,
+                delta,
+                policy: BatchPolicy::default(),
+                inject: None,
+            })?;
+            Arc::new(CoordinatorBackend::new(coord))
+        }
+        Err(e) => {
+            eprintln!("no device artifacts ({e:#}); serving from the host plan");
+            Arc::new(HostPlanBackend::new(delta))
+        }
+    };
+    let metrics = Arc::clone(backend.metrics());
+
+    let server = Server::start(listen.as_str(), backend, cfg)?;
+    let addr = server.local_addr();
+    println!("turbofft http listening on {addr}");
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, addr.port().to_string())?;
+    }
+
+    // Run until someone hits POST /admin/shutdown, or (--secs N > 0)
+    // until the watchdog expires — so a CI smoke can never orphan the
+    // process even if the client side dies.
+    let handle = server.handle();
+    let watchdog = (secs > 0.0).then(|| Instant::now() + Duration::from_secs_f64(secs));
+    while !handle.draining() {
+        if watchdog.is_some_and(|t| Instant::now() >= t) {
+            println!("watchdog: {secs}s elapsed, draining");
+            handle.shutdown();
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    server.join();
+    println!("{}", metrics.report());
+    write_telemetry(args, &metrics)?;
+    write_trace(args, &metrics)?;
     Ok(())
 }
 

@@ -1,0 +1,432 @@
+//! Minimal HTTP/1.1 framing over a `TcpStream` (offline substrate for
+//! `hyper`): request parsing with Content-Length bodies, keep-alive
+//! pipelining, and response writing.
+//!
+//! Scope is deliberately the serving subset the front end needs:
+//! request-line + headers + fixed-length body in, status + headers +
+//! fixed-length body out. Chunked transfer encoding is rejected with
+//! `411 Length Required` semantics (reported as `Malformed`), and header
+//! blocks are capped so a hostile client cannot grow the buffer without
+//! bound. Socket read/write timeouts are set by the pool before the
+//! connection reaches this module; a timeout mid-request surfaces as
+//! [`ParseError::Timeout`] so the caller can distinguish a slow-loris
+//! (started a request, never finished) from an idle keep-alive close.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Largest accepted request-line + header block, bytes.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path with any `?query` suffix stripped.
+    pub path: String,
+    /// Raw query string (without the `?`), if any.
+    pub query: Option<String>,
+    /// `true` for HTTP/1.1, `false` for HTTP/1.0.
+    pub http11: bool,
+    /// Header `(name, value)` pairs; names lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of a header, by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Connection persistence per HTTP/1.0/1.1 defaults + Connection header.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Clean close between requests (no bytes buffered).
+    Eof,
+    /// Socket timeout; `started` is true when a partial request had
+    /// already arrived (the slow-loris signature).
+    Timeout { started: bool },
+    /// Declared body exceeds the configured cap -> 413.
+    TooLarge { declared: usize },
+    /// Anything syntactically unacceptable -> 400.
+    Malformed(String),
+    /// Transport failure mid-request; connection is unusable.
+    Io(String),
+}
+
+/// Per-request read limits (from `ServerConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    pub max_body: usize,
+}
+
+/// A connection wrapper owning the read buffer so pipelined bytes left
+/// over after one request's body are the start of the next request.
+pub struct HttpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpConn {
+    pub fn new(stream: TcpStream) -> Self {
+        Self { stream, buf: Vec::with_capacity(1024) }
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Read one full request (headers + body) off the connection.
+    pub fn read_request(&mut self, limits: Limits) -> Result<Request, ParseError> {
+        let head_end = self.fill_until_headers()?;
+        let head = self.buf[..head_end].to_vec();
+        // consume the header block + blank line from the buffer
+        self.buf.drain(..head_end + 4);
+        let text = std::str::from_utf8(&head)
+            .map_err(|_| ParseError::Malformed("non-UTF8 header block".into()))?;
+        let mut lines = text.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split(' ');
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("");
+        if method.is_empty() || target.is_empty() || parts.next().is_some() {
+            return Err(ParseError::Malformed(format!(
+                "bad request line {request_line:?}"
+            )));
+        }
+        let http11 = match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            other => {
+                return Err(ParseError::Malformed(format!(
+                    "unsupported version {other:?}"
+                )))
+            }
+        };
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once(':')
+                .ok_or_else(|| ParseError::Malformed(format!("bad header {line:?}")))?;
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), Some(q.to_string())),
+            None => (target, None),
+        };
+        let mut req = Request { method, path, query, http11, headers, body: Vec::new() };
+
+        if let Some(te) = req.header("transfer-encoding") {
+            if !te.eq_ignore_ascii_case("identity") {
+                return Err(ParseError::Malformed(format!(
+                    "transfer-encoding {te:?} unsupported (use Content-Length)"
+                )));
+            }
+        }
+        let declared = match req.header("content-length") {
+            None => 0usize,
+            Some(v) => v.trim().parse().map_err(|_| {
+                ParseError::Malformed(format!("bad Content-Length {v:?}"))
+            })?,
+        };
+        if declared > limits.max_body {
+            return Err(ParseError::TooLarge { declared });
+        }
+        req.body = self.read_body(declared)?;
+        Ok(req)
+    }
+
+    /// Grow the buffer until `\r\n\r\n` appears; returns its offset.
+    fn fill_until_headers(&mut self) -> Result<usize, ParseError> {
+        loop {
+            if let Some(i) = find_subslice(&self.buf, b"\r\n\r\n") {
+                return Ok(i);
+            }
+            if self.buf.len() > MAX_HEADER_BYTES {
+                return Err(ParseError::Malformed(format!(
+                    "header block exceeds {MAX_HEADER_BYTES} bytes"
+                )));
+            }
+            let started = !self.buf.is_empty();
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(if started {
+                        ParseError::Malformed("connection closed mid-headers".into())
+                    } else {
+                        ParseError::Eof
+                    })
+                }
+                Ok(k) => self.buf.extend_from_slice(&chunk[..k]),
+                Err(e) if is_timeout(&e) => {
+                    return Err(ParseError::Timeout { started })
+                }
+                Err(e) if !started && e.kind() == io::ErrorKind::ConnectionReset => {
+                    return Err(ParseError::Eof)
+                }
+                Err(e) => return Err(ParseError::Io(e.to_string())),
+            }
+        }
+    }
+
+    /// Take exactly `len` body bytes (buffered leftovers first).
+    fn read_body(&mut self, len: usize) -> Result<Vec<u8>, ParseError> {
+        let from_buf = len.min(self.buf.len());
+        let mut body: Vec<u8> = self.buf.drain(..from_buf).collect();
+        while body.len() < len {
+            let mut chunk = [0u8; 4096];
+            let want = (len - body.len()).min(chunk.len());
+            match self.stream.read(&mut chunk[..want]) {
+                Ok(0) => {
+                    return Err(ParseError::Malformed("connection closed mid-body".into()))
+                }
+                Ok(k) => body.extend_from_slice(&chunk[..k]),
+                Err(e) if is_timeout(&e) => {
+                    return Err(ParseError::Timeout { started: true })
+                }
+                Err(e) => return Err(ParseError::Io(e.to_string())),
+            }
+        }
+        Ok(body)
+    }
+
+    /// Serialize and flush one response.
+    pub fn write_response(&mut self, resp: &Response) -> io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
+            resp.status,
+            status_reason(resp.status),
+            resp.content_type,
+            resp.body.len()
+        );
+        for (k, v) in &resp.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(if resp.close {
+            "connection: close\r\n\r\n"
+        } else {
+            "connection: keep-alive\r\n\r\n"
+        });
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(&resp.body)?;
+        self.stream.flush()
+    }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// One response ready to serialize.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub headers: Vec<(&'static str, String)>,
+    pub body: Vec<u8>,
+    /// Force `Connection: close` (also set by the pool while draining).
+    pub close: bool,
+}
+
+impl Response {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            headers: Vec::new(),
+            body: body.into().into_bytes(),
+            close: false,
+        }
+    }
+
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body: body.into().into_bytes(),
+            close: false,
+        }
+    }
+
+    /// Standard error shape: `{"error": "..."}` (message JSON-escaped).
+    pub fn error(status: u16, message: &str) -> Self {
+        let doc = crate::util::json::obj(vec![(
+            "error",
+            crate::util::json::s(message),
+        )]);
+        Self::json(status, doc.to_string())
+    }
+
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
+        self.headers.push((name, value.into()));
+        self
+    }
+
+    pub fn closing(mut self) -> Self {
+        self.close = true;
+        self
+    }
+}
+
+/// Reason phrases for every status the server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Loopback pair: returns (client stream, server-side HttpConn).
+    fn pair() -> (TcpStream, HttpConn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, HttpConn::new(server))
+    }
+
+    const LIMITS: Limits = Limits { max_body: 1024 };
+
+    #[test]
+    fn parses_get_with_headers_and_query() {
+        let (mut c, mut s) = pair();
+        c.write_all(b"GET /metrics?format=prom HTTP/1.1\r\nHost: x\r\nX-A: b\r\n\r\n")
+            .unwrap();
+        let req = s.read_request(LIMITS).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.query.as_deref(), Some("format=prom"));
+        assert_eq!(req.header("x-a"), Some("b"));
+        assert!(req.http11 && req.keep_alive());
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_and_pipelined_followup() {
+        let (mut c, mut s) = pair();
+        c.write_all(
+            b"POST /v1/fft HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcdGET /healthz HTTP/1.1\r\n\r\n",
+        )
+        .unwrap();
+        let req = s.read_request(LIMITS).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"abcd");
+        // leftover bytes frame the next request
+        let req2 = s.read_request(LIMITS).unwrap();
+        assert_eq!(req2.path, "/healthz");
+    }
+
+    #[test]
+    fn connection_close_header_wins() {
+        let (mut c, mut s) = pair();
+        c.write_all(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!s.read_request(LIMITS).unwrap().keep_alive());
+        let (mut c, mut s) = pair();
+        c.write_all(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!s.read_request(LIMITS).unwrap().keep_alive());
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_before_reading_it() {
+        let (mut c, mut s) = pair();
+        c.write_all(b"POST /v1/fft HTTP/1.1\r\ncontent-length: 9999\r\n\r\n")
+            .unwrap();
+        match s.read_request(LIMITS) {
+            Err(ParseError::TooLarge { declared }) => assert_eq!(declared, 9999),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_are_rejected() {
+        for raw in [
+            "FOO\r\n\r\n".to_string(),
+            "GET /x HTTP/2\r\n\r\n".to_string(),
+            "GET /x HTTP/1.1\r\nbad header\r\n\r\n".to_string(),
+            "GET /x HTTP/1.1\r\ncontent-length: nope\r\n\r\n".to_string(),
+            "POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n".to_string(),
+        ] {
+            let (mut c, mut s) = pair();
+            c.write_all(raw.as_bytes()).unwrap();
+            assert!(
+                matches!(s.read_request(LIMITS), Err(ParseError::Malformed(_))),
+                "accepted {raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn clean_close_is_eof_and_timeout_flags_partial() {
+        let (c, mut s) = pair();
+        drop(c);
+        assert!(matches!(s.read_request(LIMITS), Err(ParseError::Eof)));
+
+        let (mut c, mut s) = pair();
+        s.stream()
+            .set_read_timeout(Some(std::time::Duration::from_millis(40)))
+            .unwrap();
+        c.write_all(b"GET /heal").unwrap(); // never finishes: slow-loris
+        match s.read_request(LIMITS) {
+            Err(ParseError::Timeout { started }) => assert!(started),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_with_length_framing() {
+        let (mut c, mut s) = pair();
+        c.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let _ = s.read_request(LIMITS).unwrap();
+        let resp = Response::json(200, "{\"ok\":true}")
+            .with_header("retry-after", "1");
+        s.write_response(&resp).unwrap();
+        drop(s);
+        let mut got = String::new();
+        use std::io::Read as _;
+        c.read_to_string(&mut got).unwrap();
+        assert!(got.starts_with("HTTP/1.1 200 OK\r\n"), "{got}");
+        assert!(got.contains("content-length: 11"));
+        assert!(got.contains("retry-after: 1"));
+        assert!(got.ends_with("{\"ok\":true}"));
+    }
+}

@@ -1,0 +1,318 @@
+//! Network serving subsystem: a zero-dependency HTTP/1.1 front end that
+//! puts the coordinator on a TCP socket.
+//!
+//! Layout (paper framing: once fault-tolerant FFT is an always-on
+//! service, the request path in front of the kernel deserves the same
+//! engineering as the transform — arXiv:2412.05824 §serving,
+//! arXiv:1805.09891 on communication dominating distributed FFT):
+//!
+//! - [`http`] — request parsing / response writing (keep-alive,
+//!   Content-Length framing, header caps, slow-loris timeouts);
+//! - [`pool`] — the listener, bounded admission queue with load
+//!   shedding (`429` + `Retry-After` when saturated, `503` while
+//!   draining), worker thread pool, and graceful shutdown;
+//! - [`routes`] — `POST /v1/fft`, `GET /metrics`, `GET /snapshot.json`,
+//!   `GET /trace.json`, `GET /healthz`, `POST /admin/shutdown`;
+//! - [`FftBackend`] — what the routes serve from: the full
+//!   [`Coordinator`] when device artifacts are present, or the cached
+//!   host plan (`signal::plan`) with genuine checksum verification on
+//!   stub-only checkouts, so the HTTP surface is testable everywhere.
+//!
+//! Every request flows through the same lock-free [`Metrics`] the
+//! trace-replay path uses; the server adds the `server_accepted`,
+//! `server_shed`, `server_timed_out`, and `server_malformed` counters.
+
+pub mod http;
+pub mod pool;
+pub mod routes;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::{Coordinator, FftResponse, FtStatus};
+use crate::runtime::Precision;
+use crate::signal::checksum::{self, Verdict};
+use crate::signal::complex::C64;
+use crate::signal::plan::FftPlan;
+
+pub use pool::{Server, ServerHandle};
+
+/// Tuning knobs for the listener/pool (see `docs/server.md`).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// worker threads pulling connections off the admission queue
+    pub workers: usize,
+    /// bounded admission queue depth; beyond it connections are shed
+    /// with `429 Too Many Requests`
+    pub queue_cap: usize,
+    /// request body cap, bytes -> `413 Payload Too Large`
+    pub max_body: usize,
+    /// socket read timeout (slow-loris bound)
+    pub read_timeout: Duration,
+    /// socket write timeout (slow-reader bound)
+    pub write_timeout: Duration,
+    /// per-request deadline: stale work is cancelled before it reaches
+    /// a batch (`503` from the queue, `504` past the backend)
+    pub deadline: Duration,
+    /// keep-alive requests served per connection before forcing close
+    pub keep_alive_max: usize,
+    /// test hook: hold the worker this long before serving a connection
+    /// (lets the suite saturate the admission queue deterministically)
+    pub handler_delay: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            queue_cap: 128,
+            max_body: 2 * 1024 * 1024,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            deadline: Duration::from_secs(2),
+            keep_alive_max: 1024,
+            handler_delay: None,
+        }
+    }
+}
+
+/// Why a backend submission produced no response.
+#[derive(Debug)]
+pub enum BackendError {
+    /// deadline elapsed before the response arrived
+    Timeout,
+    /// the pipeline rejected or lost the request
+    Failed(String),
+}
+
+/// What the HTTP routes serve FFTs from. Implementations must be safe
+/// to call from every worker thread concurrently.
+pub trait FftBackend: Send + Sync {
+    /// The metrics bundle all counters/histograms/spans flow through
+    /// (one instance shared with the scrape endpoints).
+    fn metrics(&self) -> &Arc<Metrics>;
+
+    /// Submit a batch of signals and wait up to `deadline` for each
+    /// response. One result per input signal, in order.
+    fn submit_many(
+        &self,
+        precision: Precision,
+        signals: Vec<Vec<C64>>,
+        deadline: Duration,
+    ) -> Vec<Result<FftResponse, BackendError>>;
+
+    /// One-line description for logs and `GET /`.
+    fn describe(&self) -> String;
+
+    /// Drain in-flight work (graceful shutdown). Default: nothing.
+    fn quiesce(&self) {}
+}
+
+/// The production backend: requests go through the full coordinator
+/// (batcher -> router -> device -> fault manager). The coordinator is
+/// kept behind a mutex only for the cheap `submit` channel-send; waiting
+/// for responses happens outside the lock, so workers overlap.
+pub struct CoordinatorBackend {
+    coord: Mutex<Coordinator>,
+    metrics: Arc<Metrics>,
+}
+
+impl CoordinatorBackend {
+    pub fn new(coord: Coordinator) -> Self {
+        let metrics = Arc::clone(&coord.metrics);
+        Self { coord: Mutex::new(coord), metrics }
+    }
+}
+
+impl FftBackend for CoordinatorBackend {
+    fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    fn submit_many(
+        &self,
+        precision: Precision,
+        signals: Vec<Vec<C64>>,
+        deadline: Duration,
+    ) -> Vec<Result<FftResponse, BackendError>> {
+        let rxs: Vec<_> = {
+            let coord = self.coord.lock().unwrap();
+            signals
+                .into_iter()
+                .map(|data| coord.submit(precision, data))
+                .collect()
+        };
+        let by = Instant::now() + deadline;
+        rxs.into_iter()
+            .map(|rx| {
+                let left = by.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(Ok(resp)) => Ok(resp),
+                    Ok(Err(e)) => Err(BackendError::Failed(e.message)),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        Err(BackendError::Timeout)
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        Err(BackendError::Failed("coordinator gone".into()))
+                    }
+                }
+            })
+            .collect()
+    }
+
+    fn describe(&self) -> String {
+        "coordinator (device artifacts)".into()
+    }
+
+    fn quiesce(&self) {
+        self.coord.lock().unwrap().quiesce();
+    }
+}
+
+/// Stub-checkout backend: serves any power-of-two size through the
+/// cached host plan's fused transform+encode, judging the same two-sided
+/// checksums the device kernels emit. Telemetry parity with the
+/// coordinator path: spans, stage histograms, latency, and counters all
+/// flow through the shared [`Metrics`].
+pub struct HostPlanBackend {
+    metrics: Arc<Metrics>,
+    delta: f64,
+    next_id: AtomicU64,
+}
+
+impl HostPlanBackend {
+    pub fn new(delta: f64) -> Self {
+        Self {
+            metrics: Arc::new(Metrics::new()),
+            delta,
+            next_id: AtomicU64::new(1),
+        }
+    }
+}
+
+impl FftBackend for HostPlanBackend {
+    fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    fn submit_many(
+        &self,
+        _precision: Precision,
+        signals: Vec<Vec<C64>>,
+        deadline: Duration,
+    ) -> Vec<Result<FftResponse, BackendError>> {
+        let m = &self.metrics;
+        let tele = &m.telemetry;
+        let start = Instant::now();
+        m.submitted.fetch_add(signals.len() as u64, Ordering::Relaxed);
+        m.record_batch(signals.len(), 0);
+        let root = tele.spans.start("batch", None);
+        let root_id = root.id;
+        let mut out = Vec::with_capacity(signals.len());
+        for data in signals {
+            if start.elapsed() > deadline {
+                out.push(Err(BackendError::Timeout));
+                continue;
+            }
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let n = data.len();
+
+            let sp = tele.spans.start("transform_encode", Some(root_id));
+            let plan = FftPlan::get(n);
+            let mut y = data;
+            let meta = plan.transform_encode_inplace(&mut y, 1);
+            let end = tele.now_ns();
+            tele.stage_encode.record(end.saturating_sub(sp.start_ns));
+            tele.spans.finish_at(sp, end);
+
+            let sp = tele.spans.start("checksum_verify", Some(root_id));
+            let verdict = checksum::judge_block(&meta, self.delta, 1);
+            let end = tele.now_ns();
+            tele.stage_verify.record(end.saturating_sub(sp.start_ns));
+            tele.spans.finish_at(sp, end);
+
+            // In-process execution means a dirty verdict is numerical
+            // corruption (non-finite input, overflow), not an SEU; there
+            // is no cleaner machine to recompute on, so reject it.
+            if !matches!(verdict, Verdict::Clean) {
+                m.failed.fetch_add(1, Ordering::Relaxed);
+                out.push(Err(BackendError::Failed(format!(
+                    "host checksum verdict {verdict:?} (residual {:.3e})",
+                    meta.residual()
+                ))));
+                continue;
+            }
+            let latency = start.elapsed();
+            m.record_latency(latency);
+            m.completed.fetch_add(1, Ordering::Relaxed);
+            out.push(Ok(FftResponse {
+                id,
+                data: y,
+                latency,
+                ft: FtStatus::Verified,
+                residual: meta.residual(),
+            }));
+        }
+        tele.spans.finish(root);
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!("host plan (no device artifacts), delta {:.1e}", self.delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{complex, fft};
+    use crate::util::rng::Rng;
+    use crate::workload::signals;
+
+    #[test]
+    fn host_backend_serves_verified_ffts() {
+        let be = HostPlanBackend::new(4e-4);
+        let mut rng = Rng::new(9);
+        let x = signals::gaussian_batch(&mut rng, 1, 256);
+        let got = be.submit_many(
+            Precision::F32,
+            vec![x.clone()],
+            Duration::from_secs(1),
+        );
+        assert_eq!(got.len(), 1);
+        let resp = got[0].as_ref().expect("host fft succeeds");
+        assert_eq!(resp.ft, FtStatus::Verified);
+        let want = fft::fft(&x);
+        let err = complex::max_abs_diff(&resp.data, &want)
+            / complex::max_abs(&want).max(1e-30);
+        assert!(err < 1e-9, "err {err}");
+        let m = be.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert!(m.latency_snapshot().count() == 1);
+        assert!(m.telemetry.stage_encode.count() == 1);
+        assert!(m.telemetry.spans.total_recorded() >= 3);
+    }
+
+    #[test]
+    fn host_backend_rejects_non_finite_input() {
+        let be = HostPlanBackend::new(4e-4);
+        let mut x = vec![C64::ONE; 64];
+        x[3] = C64::new(f64::NAN, 0.0);
+        let got =
+            be.submit_many(Precision::F32, vec![x], Duration::from_secs(1));
+        assert!(matches!(got[0], Err(BackendError::Failed(_))));
+    }
+
+    #[test]
+    fn host_backend_ids_are_unique_across_calls() {
+        let be = HostPlanBackend::new(4e-4);
+        let a = be
+            .submit_many(Precision::F32, vec![vec![C64::ONE; 8]], Duration::from_secs(1));
+        let b = be
+            .submit_many(Precision::F32, vec![vec![C64::ONE; 8]], Duration::from_secs(1));
+        let (Ok(ra), Ok(rb)) = (&a[0], &b[0]) else { panic!() };
+        assert_ne!(ra.id, rb.id);
+    }
+}

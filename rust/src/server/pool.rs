@@ -1,0 +1,371 @@
+//! The listener + admission control + worker pool.
+//!
+//! One acceptor thread polls a non-blocking `TcpListener` and applies
+//! admission control at the socket boundary: while the server is
+//! draining every new connection gets `503 Service Unavailable`, and
+//! when the bounded queue is full the connection is shed with `429 Too
+//! Many Requests` + `Retry-After` before any request bytes are parsed
+//! (load shedding must be cheaper than the work being shed). Admitted
+//! connections carry their admission instant so a worker can cancel
+//! work that went stale in the queue — a request that already blew its
+//! deadline is answered `503` without ever reaching a batch.
+//!
+//! Worker threads pop connections and run the keep-alive request loop
+//! ([`handle_connection`]): parse -> route -> write, with socket
+//! timeouts bounding slow-loris reads and slow-reader writes.
+//!
+//! Graceful shutdown ([`ServerHandle::shutdown`] or
+//! `POST /admin/shutdown`): the phase flips to `Draining`, the acceptor
+//! starts refusing new connections with 503, workers finish the already
+//! admitted backlog (forcing `Connection: close` on keep-alive
+//! responses), and [`Server::join`] then quiesces the backend so
+//! in-flight batches and pending corrections flush before exit.
+
+use std::collections::VecDeque;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+
+use super::http::{HttpConn, Limits, ParseError, Response};
+use super::{routes, FftBackend, ServerConfig};
+
+/// Server lifecycle phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Running,
+    /// No new connections; admitted backlog still served.
+    Draining,
+    /// Workers joined; acceptor should exit.
+    Stopped,
+}
+
+const PHASE_RUNNING: u8 = 0;
+const PHASE_DRAINING: u8 = 1;
+const PHASE_STOPPED: u8 = 2;
+
+/// A connection past admission control, waiting for a worker.
+struct Admitted {
+    stream: TcpStream,
+    at: Instant,
+}
+
+/// State shared by the acceptor, the workers, and the routes.
+pub(crate) struct Shared {
+    pub(crate) cfg: ServerConfig,
+    pub(crate) backend: Arc<dyn FftBackend>,
+    phase: AtomicU8,
+    queue: Mutex<VecDeque<Admitted>>,
+    ready: Condvar,
+}
+
+impl Shared {
+    pub(crate) fn new(cfg: ServerConfig, backend: Arc<dyn FftBackend>) -> Self {
+        Self {
+            cfg,
+            backend,
+            phase: AtomicU8::new(PHASE_RUNNING),
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn metrics(&self) -> &Arc<Metrics> {
+        self.backend.metrics()
+    }
+
+    pub(crate) fn phase(&self) -> Phase {
+        match self.phase.load(Ordering::Acquire) {
+            PHASE_RUNNING => Phase::Running,
+            PHASE_DRAINING => Phase::Draining,
+            _ => Phase::Stopped,
+        }
+    }
+
+    /// Flip to draining (idempotent) and wake idle workers.
+    pub(crate) fn begin_drain(&self) {
+        let _ = self.phase.compare_exchange(
+            PHASE_RUNNING,
+            PHASE_DRAINING,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        self.ready.notify_all();
+    }
+
+    fn stop(&self) {
+        self.phase.store(PHASE_STOPPED, Ordering::Release);
+        self.ready.notify_all();
+    }
+}
+
+/// A running HTTP server (see module docs for the thread layout).
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// Cloneable control handle: trigger/observe shutdown from any thread.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Begin graceful drain: refuse new connections, finish the backlog.
+    pub fn shutdown(&self) {
+        self.shared.begin_drain();
+    }
+
+    /// True once a drain has been requested (locally or via the
+    /// `POST /admin/shutdown` route).
+    pub fn draining(&self) -> bool {
+        self.shared.phase() != Phase::Running
+    }
+}
+
+impl Server {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// spawn the acceptor + worker threads.
+    pub fn start(
+        listen: impl ToSocketAddrs,
+        backend: Arc<dyn FftBackend>,
+        cfg: ServerConfig,
+    ) -> io::Result<Server> {
+        let listener = TcpListener::bind(listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared::new(cfg.clone(), backend));
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("turbofft-http-{i}"))
+                    .spawn(move || worker_loop(&shared))
+            })
+            .collect::<io::Result<Vec<_>>>()?;
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("turbofft-accept".into())
+                .spawn(move || acceptor_loop(listener, &shared))?
+        };
+        Ok(Server { addr, shared, acceptor: Some(acceptor), workers })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Begin graceful drain (same as `handle().shutdown()`).
+    pub fn shutdown(&self) {
+        self.shared.begin_drain();
+    }
+
+    /// Wait for the drain to complete: workers finish the admitted
+    /// backlog, the acceptor exits, and the backend quiesces. Call
+    /// [`Server::shutdown`] (or hit `POST /admin/shutdown`) first, or
+    /// this blocks until someone does.
+    pub fn join(mut self) {
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shared.stop();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        self.shared.backend.quiesce();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Best-effort teardown when join() was never called.
+        self.shared.begin_drain();
+        self.shared.stop();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+fn acceptor_loop(listener: TcpListener, shared: &Shared) {
+    loop {
+        let phase = shared.phase();
+        if phase == Phase::Stopped {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+                if phase == Phase::Draining {
+                    reject(
+                        stream,
+                        Response::error(503, "server is draining")
+                            .with_header("retry-after", "1")
+                            .closing(),
+                    );
+                    continue;
+                }
+                // Shed happens BEFORE parsing: the point of admission
+                // control is to spend ~nothing on rejected load.
+                let shed = {
+                    let mut q = shared.queue.lock().unwrap();
+                    if q.len() >= shared.cfg.queue_cap {
+                        Some(stream)
+                    } else {
+                        q.push_back(Admitted { stream, at: Instant::now() });
+                        None
+                    }
+                };
+                match shed {
+                    None => shared.ready.notify_one(),
+                    Some(stream) => {
+                        shared
+                            .metrics()
+                            .server_shed
+                            .fetch_add(1, Ordering::Relaxed);
+                        reject(
+                            stream,
+                            Response::error(429, "admission queue full")
+                                .with_header("retry-after", "1")
+                                .closing(),
+                        );
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Write a terminal response on a connection we will not serve, then
+/// half-close and briefly drain the read side so the client reliably
+/// sees the status instead of a reset.
+fn reject(stream: TcpStream, resp: Response) {
+    use std::io::Read;
+    let mut conn = HttpConn::new(stream);
+    let _ = conn.write_response(&resp);
+    let s = conn.stream();
+    let _ = s.shutdown(Shutdown::Write);
+    let _ = s.set_read_timeout(Some(Duration::from_millis(200)));
+    let Ok(mut rs) = s.try_clone() else { return };
+    let mut sink = [0u8; 1024];
+    while matches!(rs.read(&mut sink), Ok(k) if k > 0) {}
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let admitted = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break c;
+                }
+                if shared.phase() != Phase::Running {
+                    return; // drained: nothing queued, none arriving
+                }
+                let (guard, _timeout) = shared
+                    .ready
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap();
+                q = guard;
+            }
+        };
+        handle_connection(shared, admitted);
+    }
+}
+
+fn handle_connection(shared: &Shared, admitted: Admitted) {
+    let cfg = &shared.cfg;
+    let metrics = shared.metrics();
+    if let Some(d) = cfg.handler_delay {
+        std::thread::sleep(d);
+    }
+    let Admitted { stream, at } = admitted;
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let mut conn = HttpConn::new(stream);
+
+    // Stale admission: the connection waited out its deadline in the
+    // queue; cancel before any parsing or batching happens.
+    if at.elapsed() > cfg.deadline {
+        metrics.server_timed_out.fetch_add(1, Ordering::Relaxed);
+        let _ = conn.write_response(
+            &Response::error(503, "queue wait exceeded request deadline")
+                .with_header("retry-after", "1")
+                .closing(),
+        );
+        return;
+    }
+
+    let limits = Limits { max_body: cfg.max_body };
+    for _ in 0..cfg.keep_alive_max.max(1) {
+        match conn.read_request(limits) {
+            Ok(req) => {
+                metrics.server_accepted.fetch_add(1, Ordering::Relaxed);
+                let mut resp = routes::handle(shared, &req);
+                let draining = shared.phase() != Phase::Running;
+                resp.close = resp.close || !req.keep_alive() || draining;
+                let close = resp.close;
+                if conn.write_response(&resp).is_err() || close {
+                    return;
+                }
+            }
+            Err(ParseError::Eof) => return,
+            Err(ParseError::Timeout { started }) => {
+                if started {
+                    // slow-loris: a request started arriving but never
+                    // completed within the socket timeout
+                    metrics.server_timed_out.fetch_add(1, Ordering::Relaxed);
+                    let _ = conn.write_response(
+                        &Response::error(408, "request incomplete after read timeout")
+                            .closing(),
+                    );
+                }
+                return;
+            }
+            Err(ParseError::TooLarge { declared }) => {
+                metrics.server_malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = conn.write_response(
+                    &Response::error(
+                        413,
+                        &format!(
+                            "body of {declared} bytes exceeds cap of {} bytes",
+                            cfg.max_body
+                        ),
+                    )
+                    .closing(),
+                );
+                return;
+            }
+            Err(ParseError::Malformed(msg)) => {
+                metrics.server_malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = conn
+                    .write_response(&Response::error(400, &msg).closing());
+                return;
+            }
+            Err(ParseError::Io(_)) => return,
+        }
+    }
+    // keep-alive budget exhausted: the final response already carried
+    // close=false, but dropping the stream ends the connection cleanly
+}

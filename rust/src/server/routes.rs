@@ -1,0 +1,391 @@
+//! The route table: what each HTTP path serves.
+//!
+//! | route                  | serves                                             |
+//! |------------------------|----------------------------------------------------|
+//! | `GET /`                | plain-text index + backend description             |
+//! | `GET /healthz`         | selftest: a real FFT through the backend, compared |
+//! |                        | against the reference transform (`200`/`503`)      |
+//! | `GET /metrics`         | Prometheus scrape (`telemetry::export::prometheus`)|
+//! | `GET /snapshot.json`   | JSON metrics snapshot                              |
+//! | `GET /trace.json`      | Chrome `trace_event` dump of the span ring         |
+//! | `POST /v1/fft`         | JSON batch of signals -> transformed output        |
+//! | `POST /admin/shutdown` | begin graceful drain                               |
+//!
+//! The wire schema of `POST /v1/fft` is documented in `docs/server.md`:
+//! `{"signals": [[x0, x1, ...], ...], "precision": "f32"}` where each
+//! sample is either a bare number (real input) or a `[re, im]` pair, and
+//! each signal length must be a power of two. Responses carry the
+//! transformed samples plus the fault-tolerance verdict (`ft`), the
+//! checksum residual, and the per-request latency.
+
+use std::sync::atomic::Ordering;
+
+use crate::coordinator::FtStatus;
+use crate::runtime::Precision;
+use crate::signal::complex::{self, C64};
+use crate::signal::fft;
+use crate::telemetry::export;
+use crate::util::json::{self, Json};
+
+use super::http::{Request, Response};
+use super::pool::Shared;
+use super::BackendError;
+
+/// Most signals accepted in one `POST /v1/fft` batch.
+pub const MAX_SIGNALS: usize = 1024;
+/// Largest accepted per-signal length (must also be a power of two).
+pub const MAX_N: usize = 1 << 20;
+
+/// Dispatch one parsed request to its handler.
+pub(crate) fn handle(shared: &Shared, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/") => index(shared),
+        ("GET", "/healthz") => healthz(shared),
+        ("GET", "/metrics") => {
+            let body = export::prometheus(shared.metrics());
+            let mut resp = Response::text(200, body);
+            resp.content_type = "text/plain; version=0.0.4; charset=utf-8";
+            resp
+        }
+        ("GET", "/snapshot.json") => {
+            Response::json(200, export::json_snapshot(shared.metrics()).to_string())
+        }
+        ("GET", "/trace.json") => {
+            Response::json(200, export::chrome_trace(shared.metrics()).to_string())
+        }
+        ("POST", "/v1/fft") => fft_route(shared, req),
+        ("POST", "/admin/shutdown") => {
+            shared.begin_drain();
+            Response::json(200, "{\"draining\":true}")
+        }
+        // Known paths with the wrong verb get 405 so clients can tell
+        // "bad method" from "no such endpoint".
+        (_, "/" | "/healthz" | "/metrics" | "/snapshot.json" | "/trace.json")
+        | ("GET" | "PUT" | "DELETE" | "HEAD", "/v1/fft" | "/admin/shutdown") => {
+            Response::error(405, &format!("method {} not allowed on {}", req.method, req.path))
+        }
+        _ => Response::error(404, &format!("no route for {}", req.path)),
+    }
+}
+
+fn index(shared: &Shared) -> Response {
+    Response::text(
+        200,
+        format!(
+            "turbofft serving endpoint\n\
+             backend: {}\n\
+             routes: POST /v1/fft | GET /healthz /metrics /snapshot.json /trace.json | POST /admin/shutdown\n",
+            shared.backend.describe()
+        ),
+    )
+}
+
+/// Readiness probe backed by a real transform: a deterministic 64-point
+/// signal goes through the serving backend and the output is compared
+/// against the reference FFT. A stuck worker pool, a poisoned plan
+/// cache, or a corrupted twiddle table all fail this, unlike a bare
+/// "process is up" probe.
+fn healthz(shared: &Shared) -> Response {
+    let n = 64;
+    let x: Vec<C64> = (0..n)
+        .map(|j| {
+            let t = j as f64 / n as f64;
+            C64::new((3.0 * t).cos() + 0.25 * t, (2.0 * t).sin())
+        })
+        .collect();
+    let want = fft::fft(&x);
+    let got = shared
+        .backend
+        .submit_many(Precision::F32, vec![x], shared.cfg.deadline);
+    match got.into_iter().next() {
+        Some(Ok(resp)) => {
+            let err = complex::max_abs_diff(&resp.data, &want)
+                / complex::max_abs(&want).max(1e-30);
+            if err < 1e-6 {
+                Response::text(200, "ok\n")
+            } else {
+                Response::error(
+                    503,
+                    &format!("selftest FFT diverged: relative error {err:.3e}"),
+                )
+            }
+        }
+        Some(Err(BackendError::Timeout)) => {
+            Response::error(503, "selftest timed out in the backend")
+        }
+        Some(Err(BackendError::Failed(msg))) => {
+            Response::error(503, &format!("selftest failed: {msg}"))
+        }
+        None => Response::error(503, "backend returned no selftest result"),
+    }
+}
+
+fn fft_route(shared: &Shared, req: &Request) -> Response {
+    let (precision, signals) = match parse_fft_body(&req.body) {
+        Ok(v) => v,
+        Err(msg) => {
+            shared
+                .metrics()
+                .server_malformed
+                .fetch_add(1, Ordering::Relaxed);
+            return Response::error(400, &msg);
+        }
+    };
+    let results = shared
+        .backend
+        .submit_many(precision, signals, shared.cfg.deadline);
+
+    let mut items = Vec::with_capacity(results.len());
+    let mut timed_out = 0usize;
+    let mut failed: Option<String> = None;
+    for r in results {
+        match r {
+            Ok(resp) => items.push(resp),
+            Err(BackendError::Timeout) => timed_out += 1,
+            Err(BackendError::Failed(msg)) => failed = Some(msg),
+        }
+    }
+    if timed_out > 0 {
+        shared
+            .metrics()
+            .server_timed_out
+            .fetch_add(timed_out as u64, Ordering::Relaxed);
+        return Response::error(
+            504,
+            &format!("{timed_out} signal(s) missed the {}ms deadline", shared.cfg.deadline.as_millis()),
+        )
+        .with_header("retry-after", "1");
+    }
+    if let Some(msg) = failed {
+        return Response::error(502, &format!("backend rejected batch: {msg}"));
+    }
+
+    let results_json = json::arr(items.into_iter().map(|resp| {
+        let n = resp.data.len();
+        let output = json::arr(
+            resp.data
+                .iter()
+                .map(|c| json::arr([json::num(c.re), json::num(c.im)])),
+        );
+        let residual = if resp.residual.is_finite() { resp.residual } else { 0.0 };
+        json::obj(vec![
+            ("id", json::num(resp.id as f64)),
+            ("n", json::num(n as f64)),
+            ("ft", json::s(ft_str(resp.ft))),
+            ("latency_ms", json::num(resp.latency.as_secs_f64() * 1e3)),
+            ("residual", json::num(residual)),
+            ("output", output),
+        ])
+    }));
+    let count = results_json.as_arr().map_or(0, <[Json]>::len);
+    let doc = json::obj(vec![
+        ("count", json::num(count as f64)),
+        ("results", results_json),
+    ]);
+    Response::json(200, doc.to_string())
+}
+
+fn ft_str(ft: FtStatus) -> &'static str {
+    match ft {
+        FtStatus::Unprotected => "unprotected",
+        FtStatus::Verified => "verified",
+        FtStatus::Corrected => "corrected",
+        FtStatus::TileCorrected => "tile_corrected",
+        FtStatus::Recomputed => "recomputed",
+    }
+}
+
+/// Parse and validate the `POST /v1/fft` body. Every rejection names
+/// what was wrong — "400 Bad Request" alone is useless to a client
+/// shipping multi-kilobyte float arrays.
+fn parse_fft_body(body: &[u8]) -> Result<(Precision, Vec<Vec<C64>>), String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    if text.trim().is_empty() {
+        return Err("empty body; expected {\"signals\": [[...], ...]}".into());
+    }
+    let doc = json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let precision = match doc.get("precision") {
+        None => Precision::F32,
+        Some(v) => {
+            let s = v.as_str().ok_or("\"precision\" must be a string")?;
+            Precision::parse(s).map_err(|e| e.to_string())?
+        }
+    };
+    let signals = doc
+        .get("signals")
+        .ok_or("missing \"signals\" field")?
+        .as_arr()
+        .ok_or("\"signals\" must be an array of arrays")?;
+    if signals.is_empty() {
+        return Err("\"signals\" is empty".into());
+    }
+    if signals.len() > MAX_SIGNALS {
+        return Err(format!(
+            "{} signals exceeds the batch cap of {MAX_SIGNALS}",
+            signals.len()
+        ));
+    }
+    let mut out = Vec::with_capacity(signals.len());
+    for (i, sig) in signals.iter().enumerate() {
+        let samples = sig
+            .as_arr()
+            .ok_or_else(|| format!("signal {i} is not an array"))?;
+        let n = samples.len();
+        if n == 0 || !n.is_power_of_two() {
+            return Err(format!("signal {i} has length {n}; need a power of two >= 1"));
+        }
+        if n > MAX_N {
+            return Err(format!("signal {i} has length {n}; cap is {MAX_N}"));
+        }
+        let mut data = Vec::with_capacity(n);
+        for (j, v) in samples.iter().enumerate() {
+            data.push(parse_sample(v).ok_or_else(|| {
+                format!("signal {i} sample {j}: expected a number or [re, im] pair")
+            })?);
+        }
+        out.push(data);
+    }
+    Ok((precision, out))
+}
+
+fn parse_sample(v: &Json) -> Option<C64> {
+    if let Some(re) = v.as_f64() {
+        return Some(C64::new(re, 0.0));
+    }
+    let pair = v.as_arr()?;
+    if pair.len() != 2 {
+        return None;
+    }
+    Some(C64::new(pair[0].as_f64()?, pair[1].as_f64()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::{HostPlanBackend, ServerConfig};
+    use std::sync::Arc;
+
+    fn shared() -> Shared {
+        Shared::new(
+            ServerConfig::default(),
+            Arc::new(HostPlanBackend::new(4e-4)),
+        )
+    }
+
+    fn get(path: &str) -> Request {
+        Request {
+            method: "GET".into(),
+            path: path.into(),
+            query: None,
+            http11: true,
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn post(path: &str, body: &str) -> Request {
+        Request {
+            method: "POST".into(),
+            path: path.into(),
+            query: None,
+            http11: true,
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn healthz_and_metrics_and_snapshots_respond() {
+        let sh = shared();
+        assert_eq!(handle(&sh, &get("/healthz")).status, 200);
+        let m = handle(&sh, &get("/metrics"));
+        assert_eq!(m.status, 200);
+        let text = String::from_utf8(m.body).unwrap();
+        assert!(text.contains("turbofft_completed_total"), "{text}");
+        let snap = handle(&sh, &get("/snapshot.json"));
+        assert!(json::parse(std::str::from_utf8(&snap.body).unwrap()).is_ok());
+        let trace = handle(&sh, &get("/trace.json"));
+        let doc = json::parse(std::str::from_utf8(&trace.body).unwrap()).unwrap();
+        assert!(doc.get("traceEvents").is_some());
+    }
+
+    #[test]
+    fn fft_roundtrip_matches_reference() {
+        let sh = shared();
+        let x: Vec<f64> = (0..16).map(|j| (j as f64 * 0.37).sin()).collect();
+        let body = format!(
+            "{{\"signals\":[[{}]]}}",
+            x.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+        );
+        let resp = handle(&sh, &post("/v1/fft", &body));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let doc = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(doc.get("count").unwrap().as_usize(), Some(1));
+        let r0 = &doc.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("ft").unwrap().as_str(), Some("verified"));
+        let out: Vec<C64> = r0
+            .get("output")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| {
+                let p = p.as_arr().unwrap();
+                C64::new(p[0].as_f64().unwrap(), p[1].as_f64().unwrap())
+            })
+            .collect();
+        let xin: Vec<C64> = x.iter().map(|&re| C64::new(re, 0.0)).collect();
+        let want = fft::fft(&xin);
+        let err = complex::max_abs_diff(&out, &want) / complex::max_abs(&want);
+        assert!(err < 1e-9, "err {err}");
+    }
+
+    #[test]
+    fn complex_pairs_and_precision_field_accepted() {
+        let sh = shared();
+        let body = r#"{"precision":"f64","signals":[[[1,0],[0,1],[-1,0],[0,-1]]]}"#;
+        let resp = handle(&sh, &post("/v1/fft", body));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+    }
+
+    #[test]
+    fn malformed_bodies_get_400_and_count_as_malformed() {
+        let sh = shared();
+        for body in [
+            "",
+            "not json",
+            "{\"signals\":[]}",
+            "{\"signals\":[[1,2,3]]}",           // not a power of two
+            "{\"signals\":[[1,[2],4,8]]}",       // bad sample shape
+            "{\"signals\":1}",
+            "{\"nope\":[]}",
+            "{\"precision\":\"f16\",\"signals\":[[1,2]]}",
+        ] {
+            let resp = handle(&sh, &post("/v1/fft", body));
+            assert_eq!(resp.status, 400, "accepted {body:?}");
+        }
+        let malformed = sh
+            .metrics()
+            .server_malformed
+            .load(Ordering::Relaxed);
+        assert_eq!(malformed, 8);
+    }
+
+    #[test]
+    fn unknown_route_404_and_wrong_method_405() {
+        let sh = shared();
+        assert_eq!(handle(&sh, &get("/nope")).status, 404);
+        assert_eq!(handle(&sh, &get("/v1/fft")).status, 405);
+        assert_eq!(handle(&sh, &post("/metrics", "")).status, 405);
+    }
+
+    #[test]
+    fn shutdown_route_flips_drain() {
+        let sh = shared();
+        use crate::server::pool::Phase;
+        assert_eq!(sh.phase(), Phase::Running);
+        let resp = handle(&sh, &post("/admin/shutdown", ""));
+        assert_eq!(resp.status, 200);
+        assert_eq!(sh.phase(), Phase::Draining);
+    }
+}

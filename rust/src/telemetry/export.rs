@@ -34,6 +34,10 @@ fn counter_list(m: &Metrics) -> Vec<(&'static str, u64)> {
         ("recomputed", m.recomputed.load(Ordering::Relaxed)),
         ("correction_launches", m.correction_launches.load(Ordering::Relaxed)),
         ("false_locates", m.false_locates.load(Ordering::Relaxed)),
+        ("server_accepted", m.server_accepted.load(Ordering::Relaxed)),
+        ("server_shed", m.server_shed.load(Ordering::Relaxed)),
+        ("server_timed_out", m.server_timed_out.load(Ordering::Relaxed)),
+        ("server_malformed", m.server_malformed.load(Ordering::Relaxed)),
         ("copies_saved", t.copies_saved()),
         ("spans_recorded", t.spans.total_recorded()),
         ("fault_events_recorded", t.faults.total_recorded()),
@@ -173,6 +177,55 @@ pub fn json_snapshot(m: &Metrics) -> Json {
 pub const SNAPSHOT_REQUIRED_KEYS: [&str; 5] =
     ["counters", "latency", "stages", "spans", "fault_events"];
 
+/// Chrome `trace_event` export of the span ring (the JSON Object Format
+/// with a `traceEvents` array), one complete event (`ph:"X"`) per
+/// recorded span, `ts`/`dur` in microseconds. Spans are grouped into
+/// tracks by their root ancestor (`tid` = root span id) so each batch
+/// renders as its own row in `chrome://tracing` / Perfetto, with the
+/// stage spans nested under it on the timeline.
+pub fn chrome_trace(m: &Metrics) -> Json {
+    let spans = m.telemetry.spans.snapshot();
+    let parent_of: std::collections::BTreeMap<u64, Option<u64>> =
+        spans.iter().map(|s| (s.id, s.parent)).collect();
+    // Parent ids are strictly smaller than child ids (allocation order),
+    // so this chase terminates; a parent evicted from the ring just
+    // makes the orphan its own root.
+    let root_of = |mut id: u64| loop {
+        match parent_of.get(&id) {
+            Some(Some(p)) => id = *p,
+            _ => return id,
+        }
+    };
+    let events = spans.iter().map(|s| {
+        json::obj(vec![
+            ("name", json::s(s.name)),
+            ("ph", json::s("X")),
+            ("cat", json::s("turbofft")),
+            ("pid", json::num(1.0)),
+            ("tid", json::num(root_of(s.id) as f64)),
+            ("ts", json::num(s.start_ns as f64 / 1e3)),
+            ("dur", json::num(s.end_ns.saturating_sub(s.start_ns) as f64 / 1e3)),
+            (
+                "args",
+                json::obj(vec![
+                    ("span_id", json::num(s.id as f64)),
+                    (
+                        "parent",
+                        match s.parent {
+                            Some(p) => json::num(p as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+        ])
+    });
+    json::obj(vec![
+        ("traceEvents", json::arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,6 +294,50 @@ mod tests {
         assert_eq!(spans[1].get("name").unwrap().as_str(), Some("batch"));
         let events = v.get("fault_events").unwrap().as_arr().unwrap();
         assert_eq!(events[0].get("action").unwrap().as_str(), Some("corrected"));
+    }
+
+    #[test]
+    fn chrome_trace_events_nest_under_root_track() {
+        let m = populated_metrics();
+        let doc = chrome_trace(&m).to_string();
+        let v = json::parse(&doc).expect("trace is valid JSON");
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let root = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("batch"))
+            .unwrap();
+        let child = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("transform_encode"))
+            .unwrap();
+        assert_eq!(root.get("ph").unwrap().as_str(), Some("X"));
+        // the child renders on its root's track
+        assert_eq!(
+            child.get("tid").unwrap().as_f64(),
+            root.get("args").unwrap().get("span_id").unwrap().as_f64()
+        );
+        assert_eq!(
+            child.get("args").unwrap().get("parent").unwrap().as_f64(),
+            root.get("args").unwrap().get("span_id").unwrap().as_f64()
+        );
+        assert!(child.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn server_counters_reach_both_exporters() {
+        let m = Metrics::new();
+        m.server_accepted.fetch_add(5, Ordering::Relaxed);
+        m.server_shed.fetch_add(2, Ordering::Relaxed);
+        let text = prometheus(&m);
+        assert!(text.contains("turbofft_server_accepted_total 5"));
+        assert!(text.contains("turbofft_server_shed_total 2"));
+        assert!(text.contains("turbofft_server_timed_out_total 0"));
+        assert!(text.contains("turbofft_server_malformed_total 0"));
+        let v = json::parse(&json_snapshot(&m).to_string()).unwrap();
+        let c = v.get("counters").unwrap();
+        assert_eq!(c.get("server_accepted").unwrap().as_usize(), Some(5));
+        assert_eq!(c.get("server_shed").unwrap().as_usize(), Some(2));
     }
 
     #[test]

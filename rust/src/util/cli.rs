@@ -100,6 +100,15 @@ impl Args {
         }
     }
 
+    /// Millisecond-valued flag returned as a `Duration`.
+    pub fn duration_ms_or(
+        &self,
+        key: &str,
+        default_ms: u64,
+    ) -> Result<std::time::Duration, String> {
+        Ok(std::time::Duration::from_millis(self.u64_or(key, default_ms)?))
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
         match self.flags.get(key).map(|s| s.as_str()) {
             None => Ok(default),
@@ -150,6 +159,19 @@ mod tests {
         assert_eq!(a.usize_or("n", 256).unwrap(), 256);
         assert_eq!(a.f64_or("delta", 1e-4).unwrap(), 1e-4);
         assert!(!a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn duration_flags_are_milliseconds() {
+        let a = Args::parse(&sv(&["--deadline-ms", "250"])).unwrap();
+        assert_eq!(
+            a.duration_ms_or("deadline-ms", 2000).unwrap(),
+            std::time::Duration::from_millis(250)
+        );
+        assert_eq!(
+            a.duration_ms_or("other", 2000).unwrap(),
+            std::time::Duration::from_secs(2)
+        );
     }
 
     #[test]

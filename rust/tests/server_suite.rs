@@ -1,0 +1,389 @@
+//! Integration tests for the HTTP serving subsystem, over real loopback
+//! sockets: a `Server` with the host-plan backend is started on an
+//! ephemeral port and driven by a minimal in-test HTTP client. Covers
+//! the happy paths (healthz, scrapes, FFT roundtrip vs the reference
+//! transform, keep-alive) and every rejection path the front end
+//! promises: 400 malformed, 413 oversized, 429 shed, 408 slow-loris,
+//! plus graceful shutdown finishing in-flight work while new
+//! connections get 503.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use turbofft::server::{FftBackend, HostPlanBackend, Server, ServerConfig};
+use turbofft::signal::complex::{self, C64};
+use turbofft::signal::fft;
+use turbofft::util::json;
+
+/// Start a server on an ephemeral loopback port; returns it with the
+/// typed backend so tests can assert on counters directly.
+fn start(cfg: ServerConfig) -> (Server, Arc<HostPlanBackend>) {
+    let backend = Arc::new(HostPlanBackend::new(4e-4));
+    let server = Server::start(
+        "127.0.0.1:0",
+        Arc::clone(&backend) as Arc<dyn FftBackend>,
+        cfg,
+    )
+    .expect("bind loopback");
+    (server, backend)
+}
+
+/// One parsed response off the wire.
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).expect("UTF-8 body")
+    }
+}
+
+/// Read exactly one Content-Length-framed response.
+fn read_reply(stream: &mut TcpStream) -> Reply {
+    let mut buf = Vec::new();
+    let head_end = loop {
+        if let Some(i) = buf
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+        {
+            break i;
+        }
+        let mut chunk = [0u8; 2048];
+        let k = stream.read(&mut chunk).expect("read response head");
+        assert!(k > 0, "connection closed before response head: {:?}",
+                String::from_utf8_lossy(&buf));
+        buf.extend_from_slice(&chunk[..k]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+    let mut lines = head.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.parse().unwrap())
+        .unwrap_or(0);
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body.len() < len {
+        let mut chunk = vec![0u8; len - body.len()];
+        let k = stream.read(&mut chunk).expect("read response body");
+        assert!(k > 0, "connection closed mid-body");
+        body.extend_from_slice(&chunk[..k]);
+    }
+    body.truncate(len);
+    Reply { status, headers, body }
+}
+
+fn connect(server: &Server) -> TcpStream {
+    let s = TcpStream::connect(server.local_addr()).expect("connect loopback");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_nodelay(true).unwrap();
+    s
+}
+
+fn get(server: &Server, path: &str) -> Reply {
+    let mut s = connect(server);
+    write!(s, "GET {path} HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n").unwrap();
+    read_reply(&mut s)
+}
+
+fn post(server: &Server, path: &str, body: &str) -> Reply {
+    let mut s = connect(server);
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    read_reply(&mut s)
+}
+
+fn stop(server: Server) {
+    server.shutdown();
+    server.join();
+}
+
+#[test]
+fn healthz_is_selftest_backed() {
+    let (server, _) = start(ServerConfig::default());
+    let r = get(&server, "/healthz");
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    assert_eq!(r.body_str(), "ok\n");
+    stop(server);
+}
+
+#[test]
+fn metrics_scrape_has_serving_and_server_counters() {
+    let (server, _) = start(ServerConfig::default());
+    // drive one real request through first so counters are non-trivial
+    let ok = post(&server, "/v1/fft", r#"{"signals":[[1,2,3,4]]}"#);
+    assert_eq!(ok.status, 200, "{}", ok.body_str());
+    let r = get(&server, "/metrics");
+    assert_eq!(r.status, 200);
+    let text = r.body_str();
+    assert!(text.contains("turbofft_completed_total 1"), "{text}");
+    assert!(text.contains("turbofft_server_accepted_total"), "{text}");
+    assert!(text.contains("turbofft_latency_seconds_count 1"), "{text}");
+    stop(server);
+}
+
+#[test]
+fn fft_roundtrip_matches_reference_transform() {
+    let (server, _) = start(ServerConfig::default());
+    let n = 64;
+    let x: Vec<f64> = (0..n).map(|j| (j as f64 * 0.711).cos()).collect();
+    let body = format!(
+        "{{\"signals\":[[{}]]}}",
+        x.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+    );
+    let r = post(&server, "/v1/fft", &body);
+    assert_eq!(r.status, 200, "{}", r.body_str());
+    let doc = json::parse(r.body_str()).expect("valid JSON body");
+    assert_eq!(doc.get("count").unwrap().as_usize(), Some(1));
+    let r0 = &doc.get("results").unwrap().as_arr().unwrap()[0];
+    assert_eq!(r0.get("ft").unwrap().as_str(), Some("verified"));
+    assert_eq!(r0.get("n").unwrap().as_usize(), Some(n));
+    let out: Vec<C64> = r0
+        .get("output")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| {
+            let p = p.as_arr().unwrap();
+            C64::new(p[0].as_f64().unwrap(), p[1].as_f64().unwrap())
+        })
+        .collect();
+    let xin: Vec<C64> = x.iter().map(|&re| C64::new(re, 0.0)).collect();
+    let want = fft::fft(&xin);
+    let err = complex::max_abs_diff(&out, &want) / complex::max_abs(&want);
+    assert!(err < 1e-9, "roundtrip error {err}");
+    stop(server);
+}
+
+#[test]
+fn snapshot_and_trace_endpoints_serve_valid_json() {
+    let (server, _) = start(ServerConfig::default());
+    let ok = post(&server, "/v1/fft", r#"{"signals":[[1,0,1,0,1,0,1,0]]}"#);
+    assert_eq!(ok.status, 200);
+    let snap = get(&server, "/snapshot.json");
+    assert_eq!(snap.status, 200);
+    let doc = json::parse(snap.body_str()).expect("snapshot parses");
+    assert!(doc.get("counters").is_some() && doc.get("spans").is_some());
+    let trace = get(&server, "/trace.json");
+    assert_eq!(trace.status, 200);
+    let doc = json::parse(trace.body_str()).expect("trace parses");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "span ring produced no trace events");
+    assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+    stop(server);
+}
+
+#[test]
+fn malformed_json_gets_400_and_counts() {
+    let (server, backend) = start(ServerConfig::default());
+    let r = post(&server, "/v1/fft", "this is not json");
+    assert_eq!(r.status, 400);
+    assert!(r.body_str().contains("error"), "{}", r.body_str());
+    let r = post(&server, "/v1/fft", r#"{"signals":[[1,2,3]]}"#);
+    assert_eq!(r.status, 400, "non-power-of-two length must be rejected");
+    assert_eq!(
+        backend.metrics().server_malformed.load(Ordering::Relaxed),
+        2
+    );
+    stop(server);
+}
+
+#[test]
+fn oversized_body_gets_413_without_reading_it() {
+    let (server, backend) = start(ServerConfig {
+        max_body: 1024,
+        ..ServerConfig::default()
+    });
+    let mut s = connect(&server);
+    // declare 4 KiB; the server must reject on the declaration alone
+    write!(s, "POST /v1/fft HTTP/1.1\r\nhost: t\r\ncontent-length: 4096\r\n\r\n").unwrap();
+    let r = read_reply(&mut s);
+    assert_eq!(r.status, 413);
+    assert_eq!(
+        backend.metrics().server_malformed.load(Ordering::Relaxed),
+        1
+    );
+    stop(server);
+}
+
+#[test]
+fn saturated_queue_sheds_429_with_retry_after() {
+    let (server, backend) = start(ServerConfig {
+        workers: 1,
+        queue_cap: 1,
+        handler_delay: Some(Duration::from_millis(400)),
+        deadline: Duration::from_secs(5),
+        ..ServerConfig::default()
+    });
+    // Burst of parallel connections: 1 in service (worker sleeping in
+    // handler_delay), 1 queued, the rest shed at admission.
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let addr = server.local_addr();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                write!(
+                    s,
+                    "GET /healthz HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n"
+                )
+                .unwrap();
+                read_reply(&mut s).status
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let shed = statuses.iter().filter(|&&s| s == 429).count();
+    assert!(ok >= 1, "admitted connections must still be served: {statuses:?}");
+    assert!(shed >= 1, "expected shed connections in {statuses:?}");
+    assert!(
+        backend.metrics().server_shed.load(Ordering::Relaxed) >= shed as u64
+    );
+    stop(server);
+}
+
+#[test]
+fn shed_response_carries_retry_after_header() {
+    let (server, _) = start(ServerConfig {
+        workers: 1,
+        queue_cap: 1,
+        handler_delay: Some(Duration::from_millis(500)),
+        ..ServerConfig::default()
+    });
+    // Fill service + queue with idle connections. Three of them cover
+    // both orderings: whether or not the worker has already popped the
+    // first one, the queue is full by the time the probe arrives.
+    let busy: Vec<TcpStream> = (0..3).map(|_| connect(&server)).collect();
+    std::thread::sleep(Duration::from_millis(150));
+    let mut s = connect(&server);
+    let r = read_reply(&mut s); // 429 arrives without even sending a request
+    assert_eq!(r.status, 429);
+    assert_eq!(r.header("retry-after"), Some("1"));
+    drop(busy);
+    stop(server);
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_and_rejects_new() {
+    let (server, _) = start(ServerConfig {
+        workers: 1,
+        handler_delay: Some(Duration::from_millis(400)),
+        ..ServerConfig::default()
+    });
+    // in-flight: admitted before the drain begins, served during it
+    let addr = server.local_addr();
+    let inflight = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write!(s, "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n").unwrap();
+        read_reply(&mut s)
+    });
+    std::thread::sleep(Duration::from_millis(100)); // let it get admitted
+    server.shutdown();
+    std::thread::sleep(Duration::from_millis(50));
+    // new connection while draining -> 503
+    let mut s = connect(&server);
+    let r = read_reply(&mut s);
+    assert_eq!(r.status, 503, "draining server must refuse new connections");
+    assert_eq!(r.header("retry-after"), Some("1"));
+    // the in-flight request still completes successfully
+    let r = inflight.join().unwrap();
+    assert_eq!(r.status, 200, "in-flight request must drain: {}", r.body_str());
+    assert_eq!(
+        r.header("connection"),
+        Some("close"),
+        "drained responses force connection close"
+    );
+    server.join();
+}
+
+#[test]
+fn keep_alive_serves_multiple_requests_per_connection() {
+    let (server, backend) = start(ServerConfig::default());
+    let mut s = connect(&server);
+    for _ in 0..3 {
+        write!(s, "GET /healthz HTTP/1.1\r\nhost: t\r\n\r\n").unwrap();
+        let r = read_reply(&mut s);
+        assert_eq!(r.status, 200);
+        assert_eq!(r.header("connection"), Some("keep-alive"));
+    }
+    assert_eq!(
+        backend.metrics().server_accepted.load(Ordering::Relaxed),
+        3,
+        "three requests over one connection"
+    );
+    drop(s); // free the worker promptly (EOF beats the read timeout)
+    stop(server);
+}
+
+#[test]
+fn slow_loris_gets_408_after_read_timeout() {
+    let (server, backend) = start(ServerConfig {
+        read_timeout: Duration::from_millis(150),
+        ..ServerConfig::default()
+    });
+    let mut s = connect(&server);
+    // start a request and never finish it
+    s.write_all(b"GET /heal").unwrap();
+    let r = read_reply(&mut s);
+    assert_eq!(r.status, 408);
+    assert_eq!(
+        backend.metrics().server_timed_out.load(Ordering::Relaxed),
+        1
+    );
+    stop(server);
+}
+
+#[test]
+fn shutdown_route_drains_like_the_handle() {
+    let (server, _) = start(ServerConfig::default());
+    let r = post(&server, "/admin/shutdown", "");
+    assert_eq!(r.status, 200);
+    assert!(r.body_str().contains("draining"));
+    assert!(server.handle().draining());
+    // acceptor now refuses: new connection sees 503
+    let mut s = connect(&server);
+    let r = read_reply(&mut s);
+    assert_eq!(r.status, 503);
+    server.join();
+}
+
+#[test]
+fn unknown_route_404_wrong_method_405() {
+    let (server, _) = start(ServerConfig::default());
+    assert_eq!(get(&server, "/nope").status, 404);
+    assert_eq!(get(&server, "/v1/fft").status, 405);
+    assert_eq!(post(&server, "/metrics", "").status, 405);
+    stop(server);
+}
