@@ -8,8 +8,24 @@ set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
+
+# Lint lane (before tests: invariant violations should fail fast).
+# ftlint is the in-tree invariant linter (docs/lint.md): fault-event
+# parity, exporter parity, panic-free request paths, lock-free telemetry,
+# documented atomic orderings, SAFETY comments. Gates on any finding not
+# in ftlint.baseline. Pure std + cargo, so it runs on stub-only checkouts.
+cargo run --release --bin ftlint -- rust/src --json
+cargo clippy --workspace --all-targets -- -D warnings \
+  -D clippy::dbg_macro -D clippy::todo -D clippy::unimplemented
+# rustfmt is advisory-only: the tree predates a formatting pass, and the
+# toolchain image may ship without the rustfmt component.
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --all --check || echo "rustfmt: formatting drift (advisory only)"
+else
+  echo "rustfmt unavailable; skipping format check"
+fi
+
 cargo test -q
-cargo clippy --workspace --all-targets -- -D warnings
 cargo bench --bench hotpath -- --quick
 
 # BENCH_hotpath.json must carry the per-stage histogram section

@@ -5,6 +5,13 @@
 //! non-zero when the error rate crosses a threshold — which is how
 //! `ci.sh` uses it as a smoke gate.
 //!
+//! After the run the client's percentiles are cross-checked against the
+//! server's own lock-free histogram (`GET /snapshot.json`): a server
+//! tail materially worse than the client's means the client
+//! under-sampled queue delay (coordinated omission). Drift past
+//! `--drift-tol` (default 0.25, i.e. 25%) warns; `--strict` turns the
+//! warning into exit code 2.
+//!
 //!     # terminal 1
 //!     cargo run --release -- serve --listen 127.0.0.1:7070
 //!     # terminal 2
@@ -28,6 +35,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use turbofft::util::cli::Args;
+use turbofft::util::json;
 use turbofft::util::rng::Rng;
 use turbofft::util::stats::Summary;
 
@@ -54,42 +62,73 @@ impl Client {
         Self { addr: addr.to_string(), conn: None }
     }
 
-    /// POST `body` to `path`; returns the response status. Reconnects
-    /// once on a stale keep-alive connection.
+    /// POST `body` to `path`; returns the response status.
     fn post(&mut self, path: &str, body: &str) -> std::io::Result<u16> {
-        for attempt in 0..2 {
+        self.request("POST", path, Some(body)).map(|(status, _)| status)
+    }
+
+    /// GET `path`; returns the response status and body.
+    fn get(&mut self, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+        self.request("GET", path, None)
+    }
+
+    /// One request/response exchange; reconnects once on a stale
+    /// keep-alive connection (drain, keep_alive_max, timeout).
+    fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        let mut last = std::io::Error::new(
+            std::io::ErrorKind::Other,
+            "request not attempted",
+        );
+        for _attempt in 0..2 {
             if self.conn.is_none() {
                 let s = TcpStream::connect(&self.addr)?;
                 s.set_nodelay(true)?;
                 s.set_read_timeout(Some(Duration::from_secs(10)))?;
                 self.conn = Some(BufReader::new(s));
             }
-            match self.roundtrip(path, body) {
-                Ok(status) => return Ok(status),
-                Err(e) if attempt == 0 => {
-                    // server closed the keep-alive connection (drain,
-                    // keep_alive_max, timeout): reconnect and retry once
-                    self.conn = None;
-                    let _ = e;
-                }
+            match self.roundtrip(method, path, body) {
+                Ok(out) => return Ok(out),
                 Err(e) => {
+                    // stale connection: drop it and retry once fresh
                     self.conn = None;
-                    return Err(e);
+                    last = e;
                 }
             }
         }
-        unreachable!()
+        Err(last)
     }
 
-    fn roundtrip(&mut self, path: &str, body: &str) -> std::io::Result<u16> {
-        let conn = self.conn.as_mut().unwrap();
-        let head = format!(
-            "POST {path} HTTP/1.1\r\nhost: turbofft\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
-            body.len()
-        );
+    fn roundtrip(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<(u16, Vec<u8>)> {
+        let Some(conn) = self.conn.as_mut() else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                "no connection",
+            ));
+        };
+        let head = match body {
+            Some(b) => format!(
+                "{method} {path} HTTP/1.1\r\nhost: turbofft\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+                b.len()
+            ),
+            None => {
+                format!("{method} {path} HTTP/1.1\r\nhost: turbofft\r\n\r\n")
+            }
+        };
         let stream = conn.get_mut();
         stream.write_all(head.as_bytes())?;
-        stream.write_all(body.as_bytes())?;
+        if let Some(b) = body {
+            stream.write_all(b.as_bytes())?;
+        }
         stream.flush()?;
 
         let mut status_line = String::new();
@@ -135,12 +174,12 @@ impl Client {
                 }
             }
         }
-        let mut body = vec![0u8; content_length];
-        conn.read_exact(&mut body)?;
+        let mut resp_body = vec![0u8; content_length];
+        conn.read_exact(&mut resp_body)?;
         if close {
             self.conn = None;
         }
-        Ok(status)
+        Ok((status, resp_body))
     }
 }
 
@@ -217,7 +256,7 @@ fn worker(
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv).unwrap_or_default();
+    let args = Args::parse_with_bools(&argv, &["strict"]).unwrap_or_default();
     let addr = args.str_or("addr", "127.0.0.1:7070");
     let rate = args.f64_or("rate", 200.0).unwrap_or(200.0);
     let secs = args.f64_or("secs", 1.0).unwrap_or(1.0);
@@ -226,6 +265,10 @@ fn main() {
     let n = args.usize_or("n", 256).unwrap_or(256);
     let max_error_rate = args.f64_or("max-error-rate", 0.01).unwrap_or(0.01);
     let seed = args.u64_or("seed", 1).unwrap_or(1);
+    // server-vs-client percentile tolerance for the coordinated-omission
+    // cross-check; `--strict` turns drift warnings into exit code 2
+    let drift_tol = args.f64_or("drift-tol", 0.25).unwrap_or(0.25);
+    let strict = args.bool_or("strict", false).unwrap_or(false);
 
     let schedule: Schedule = if rate > 0.0 {
         // precompute Poisson arrival offsets for the whole run
@@ -309,6 +352,50 @@ fn main() {
             .collect();
         println!("errors by status: {}", parts.join(", "));
     }
+
+    // Coordinated-omission cross-check: a stalled client thread stops
+    // sampling while the server keeps accumulating queue delay, so
+    // client-side percentiles can silently under-report the tail. Pull
+    // the server's own histogram from /snapshot.json and flag any
+    // quantile where the server is materially worse than what we
+    // measured (one-sided: the server being *better* is just scrape
+    // noise from requests outside this run).
+    let mut drift = false;
+    let mut snapshot_failed = false;
+    if !lat.is_empty() {
+        match fetch_server_latency_ms(&addr) {
+            Ok(server) => {
+                for (label, client_ms, server_ms) in [
+                    ("p50", lat.percentile(50.0), server.0),
+                    ("p95", lat.percentile(95.0), server.1),
+                    ("p99", lat.percentile(99.0), server.2),
+                ] {
+                    let gap = server_ms - client_ms;
+                    if gap > drift_tol * client_ms.max(0.001) && gap > 0.2 {
+                        drift = true;
+                        eprintln!(
+                            "loadgen: coordinated-omission drift at {label}: \
+                             server {server_ms:.3} ms vs client {client_ms:.3} ms \
+                             (gap {gap:.3} ms exceeds {:.0}% tolerance)",
+                            100.0 * drift_tol
+                        );
+                    }
+                }
+                if !drift {
+                    println!(
+                        "loadgen: server-side percentiles agree with client \
+                         (within {:.0}%)",
+                        100.0 * drift_tol
+                    );
+                }
+            }
+            Err(e) => {
+                snapshot_failed = true;
+                eprintln!("loadgen: /snapshot.json cross-check unavailable: {e}");
+            }
+        }
+    }
+
     if error_rate > max_error_rate {
         eprintln!(
             "loadgen: error rate {:.2}% exceeds threshold {:.2}%",
@@ -317,4 +404,29 @@ fn main() {
         );
         std::process::exit(1);
     }
+    if strict && (drift || snapshot_failed) {
+        eprintln!("loadgen: --strict: failing on the latency cross-check");
+        std::process::exit(2);
+    }
+}
+
+/// GET the server's `/snapshot.json` and return its latency
+/// (p50, p95, p99) in milliseconds.
+fn fetch_server_latency_ms(addr: &str) -> Result<(f64, f64, f64), String> {
+    let (status, body) = Client::new(addr)
+        .get("/snapshot.json")
+        .map_err(|e| format!("fetch failed: {e}"))?;
+    if status != 200 {
+        return Err(format!("status {status}"));
+    }
+    let text = std::str::from_utf8(&body).map_err(|e| format!("not UTF-8: {e}"))?;
+    let doc = json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let q = |key: &str| -> Result<f64, String> {
+        doc.get("latency")
+            .and_then(|l| l.get(key))
+            .and_then(|v| v.as_f64())
+            .map(|secs| secs * 1e3)
+            .ok_or_else(|| format!("snapshot missing latency.{key}"))
+    };
+    Ok((q("p50")?, q("p95")?, q("p99")?))
 }

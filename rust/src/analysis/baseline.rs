@@ -1,0 +1,126 @@
+//! Checked-in baseline for `ftlint`.
+//!
+//! The baseline lets a finding be acknowledged without being fixed —
+//! with a justification — while still failing the build on any *new*
+//! finding. Entries are content-matched (rule + path suffix + exact
+//! trimmed source line), never line-number-matched, so unrelated edits
+//! above a baselined line don't invalidate the baseline.
+//!
+//! File format (one entry per line; `#` starts a comment):
+//!
+//! ```text
+//! rule-name | path/suffix.rs | exact trimmed source line
+//! ```
+//!
+//! Stale entries (matching no current finding) are reported as warnings
+//! so the file shrinks as debt is paid down.
+
+use std::io;
+
+use super::Finding;
+
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub rule: String,
+    /// matched with `ends_with` against the normalized finding path
+    pub path: String,
+    /// must equal the finding's trimmed source line
+    pub content: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+    /// lines that looked like entries but didn't split into 3 fields
+    pub malformed: Vec<String>,
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Baseline {
+        let mut bl = Baseline::default();
+        for raw in text.lines() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, '|');
+            match (parts.next(), parts.next(), parts.next()) {
+                (Some(rule), Some(path), Some(content)) => {
+                    bl.entries.push(BaselineEntry {
+                        rule: rule.trim().to_string(),
+                        path: path.trim().replace('\\', "/"),
+                        content: content.trim().to_string(),
+                    });
+                }
+                _ => bl.malformed.push(line.to_string()),
+            }
+        }
+        bl
+    }
+
+    pub fn load(path: &str) -> io::Result<Baseline> {
+        Ok(Baseline::parse(&std::fs::read_to_string(path)?))
+    }
+
+    /// Index of the first entry matching `f`, if any.
+    pub fn matches(&self, f: &Finding) -> Option<usize> {
+        let norm_path = f.path.replace('\\', "/");
+        self.entries.iter().position(|e| {
+            e.rule == f.rule && norm_path.ends_with(&e.path) && e.content == f.snippet
+        })
+    }
+}
+
+/// Render a finding in baseline-entry form (for easy copy-paste when a
+/// finding is being acknowledged rather than fixed).
+pub fn format_entry(f: &Finding) -> String {
+    format!("{} | {} | {}", f.rule, f.path.replace('\\', "/"), f.snippet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(rule: &'static str, path: &str, snippet: &str) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line: 42,
+            message: "m".to_string(),
+            snippet: snippet.to_string(),
+        }
+    }
+
+    #[test]
+    fn parse_skips_comments_and_flags_malformed() {
+        let bl = Baseline::parse(
+            "# header\n\nno-lock-hot-path | telemetry/span.rs | use std::sync::Mutex;\nbad line no pipes\n",
+        );
+        assert_eq!(bl.entries.len(), 1);
+        assert_eq!(bl.malformed.len(), 1);
+    }
+
+    #[test]
+    fn matches_on_content_not_line_number() {
+        let bl = Baseline::parse(
+            "no-lock-hot-path | telemetry/span.rs | use std::sync::Mutex;\n",
+        );
+        let f = fake(
+            "no-lock-hot-path",
+            "rust/src/telemetry/span.rs",
+            "use std::sync::Mutex;",
+        );
+        assert!(bl.matches(&f).is_some());
+        let other = fake("no-lock-hot-path", "rust/src/telemetry/span.rs", "other line");
+        assert!(bl.matches(&other).is_none());
+        let wrong_rule = fake("safety-comment", "rust/src/telemetry/span.rs", "use std::sync::Mutex;");
+        assert!(bl.matches(&wrong_rule).is_none());
+    }
+
+    #[test]
+    fn format_roundtrips_through_parse() {
+        let f = fake("safety-comment", "src/x.rs", "unsafe { ptr::read(p) }");
+        let bl = Baseline::parse(&format_entry(&f));
+        assert_eq!(bl.matches(&f), Some(0));
+    }
+}

@@ -1,0 +1,731 @@
+//! Comment/string-aware Rust tokenizer for the in-tree linter.
+//!
+//! This is not a full Rust lexer — it is exactly enough structure for
+//! the invariant rules in [`super::rules`] to be precise where a grep
+//! cannot be:
+//!
+//! - comments and string/char literals are separated from code tokens,
+//!   so `"unwrap"` in a message never looks like a call to `unwrap`;
+//! - brace depth is tracked per token, which gives cheap block matching
+//!   (function bodies, `#[cfg(test)]` modules, struct bodies);
+//! - `#[cfg(test)]` / `#[test]` item bodies are marked as test regions
+//!   so hot-path rules never fire on test code;
+//! - `// ftlint: allow(rule)` and `// ftlint: allow-file(rule): reason`
+//!   directives are parsed out of the comment stream.
+//!
+//! The lexer is tolerant by design: on malformed input it produces the
+//! best-effort token stream instead of failing, because a linter that
+//! dies on the file it should be checking protects nothing.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Token classification (only as fine as the rules need).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// identifier or keyword
+    Ident,
+    Int,
+    Float,
+    /// string literal; `text` holds the unquoted content
+    Str,
+    Char,
+    Lifetime,
+    /// single punctuation character
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based source line
+    pub line: usize,
+    /// brace depth outside this token (`{` and its matching `}` share it)
+    pub depth: usize,
+}
+
+/// One comment (line or block); `text` excludes the `//` / `/*` markers.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// A function item's location: declaration line and brace-matched body.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub decl_line: usize,
+    /// token index of the body `{`
+    pub body_start: usize,
+    /// token index of the matching `}`
+    pub body_end: usize,
+    pub start_line: usize,
+    pub end_line: usize,
+}
+
+/// A fully lexed source file plus the derived structure the rules use.
+pub struct Lexed {
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub lines: Vec<String>,
+    pub fns: Vec<FnSpan>,
+    /// inclusive line ranges covered by `#[cfg(test)]` / `#[test]` items
+    test_regions: Vec<(usize, usize)>,
+    /// rules suppressed for the whole file via `ftlint: allow-file(...)`
+    allow_file: BTreeSet<String>,
+    /// line -> rules suppressed there via `ftlint: allow(...)`
+    allow_lines: BTreeMap<usize, BTreeSet<String>>,
+}
+
+impl Lexed {
+    /// True when `line` falls inside a test-only item body.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|&(s, e)| s <= line && line <= e)
+    }
+
+    /// True when `rule` is suppressed at `line` by an allow directive.
+    pub fn is_suppressed(&self, rule: &str, line: usize) -> bool {
+        if self.allow_file.contains(rule) {
+            return true;
+        }
+        self.allow_lines
+            .get(&line)
+            .map(|rules| rules.contains(rule))
+            .unwrap_or(false)
+    }
+
+    /// The innermost function whose body contains `line`.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.decl_line <= line && line <= f.end_line)
+            .max_by_key(|f| f.decl_line)
+    }
+
+    /// The contiguous comment/attribute block directly above `line`
+    /// (doc comments, `//` comments, `#[...]` attributes), as raw
+    /// trimmed source lines, nearest first.
+    pub fn comment_block_above(&self, line: usize) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            let Some(raw) = self.lines.get(l - 1) else { break };
+            let t = raw.trim();
+            if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![") {
+                out.push(t);
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Comments whose line falls in `[lo, hi]` (inclusive).
+    pub fn comments_in(&self, lo: usize, hi: usize) -> impl Iterator<Item = &Comment> {
+        self.comments.iter().filter(move |c| c.line >= lo && c.line <= hi)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `text` into the structure above. Never fails; see module docs.
+pub fn lex(path: &str, text: &str) -> Lexed {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut depth = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers /// and //! doc comments)
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment { line, text: chars[start..j].iter().collect() });
+            i = j;
+            continue;
+        }
+        // block comment, nesting per Rust
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start_line = line;
+            let mut level = 1usize;
+            let mut j = i + 2;
+            let mut acc = String::new();
+            while j < n && level > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    level += 1;
+                    acc.push_str("/*");
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    level -= 1;
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '\n' {
+                    line += 1;
+                }
+                acc.push(chars[j]);
+                j += 1;
+            }
+            comments.push(Comment { line: start_line, text: acc });
+            i = j;
+            continue;
+        }
+        // raw strings r"..." / r#"..."#, byte strings b"...", br#"..."#,
+        // raw identifiers r#ident, byte chars b'x'
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let mut raw = c == 'r';
+            if c == 'b' && j < n && chars[j] == 'r' {
+                raw = true;
+                j += 1;
+            }
+            if raw {
+                let mut hashes = 0usize;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    // raw string: scan to `"` + `#`*hashes
+                    let start_line = line;
+                    let mut k = j + 1;
+                    let mut content = String::new();
+                    'raw: while k < n {
+                        if chars[k] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && k + 1 + h < n && chars[k + 1 + h] == '#'
+                            {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                k += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        if chars[k] == '\n' {
+                            line += 1;
+                        }
+                        content.push(chars[k]);
+                        k += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: content,
+                        line: start_line,
+                        depth,
+                    });
+                    i = k;
+                    continue;
+                }
+                if c == 'r' && hashes > 0 && j < n && is_ident_start(chars[j]) {
+                    // raw identifier r#type
+                    let mut k = j;
+                    while k < n && is_ident_cont(chars[k]) {
+                        k += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Ident,
+                        text: chars[j..k].iter().collect(),
+                        line,
+                        depth,
+                    });
+                    i = k;
+                    continue;
+                }
+                // plain identifier starting with r/b after all
+            } else if j < n && chars[j] == '"' {
+                // byte string b"..."
+                let (tok, k, nl) = scan_string(&chars, j, line, depth);
+                toks.push(tok);
+                line += nl;
+                i = k;
+                continue;
+            } else if j < n && chars[j] == '\'' {
+                // byte char b'x'
+                let (tok, k) = scan_char(&chars, j, line, depth);
+                toks.push(tok);
+                i = k;
+                continue;
+            }
+            // fall through: ordinary identifier beginning with r or b
+        }
+        if c == '"' {
+            let (tok, k, nl) = scan_string(&chars, i, line, depth);
+            toks.push(tok);
+            line += nl;
+            i = k;
+            continue;
+        }
+        if c == '\'' {
+            // lifetime ('a, 'static, '_) vs char literal ('x', '\n')
+            let next = chars.get(i + 1).copied();
+            let after = chars.get(i + 2).copied();
+            let is_lifetime = matches!(next, Some(x) if is_ident_cont(x))
+                && next != Some('\\')
+                && after != Some('\'');
+            if is_lifetime {
+                let mut k = i + 1;
+                while k < n && is_ident_cont(chars[k]) {
+                    k += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: chars[i + 1..k].iter().collect(),
+                    line,
+                    depth,
+                });
+                i = k;
+                continue;
+            }
+            let (tok, k) = scan_char(&chars, i, line, depth);
+            toks.push(tok);
+            i = k;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut k = i + 1;
+            while k < n && is_ident_cont(chars[k]) {
+                k += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: chars[i..k].iter().collect(),
+                line,
+                depth,
+            });
+            i = k;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut k = i + 1;
+            let mut is_float = false;
+            while k < n {
+                let d = chars[k];
+                if is_ident_cont(d) {
+                    k += 1;
+                    continue;
+                }
+                // decimal point: `1.5` yes, `1..n` and `1.max()` no
+                if d == '.'
+                    && !is_float
+                    && matches!(chars.get(k + 1), Some(x) if x.is_ascii_digit())
+                {
+                    is_float = true;
+                    k += 1;
+                    continue;
+                }
+                // exponent sign: 1.5e-3, 2E+9
+                if (d == '+' || d == '-')
+                    && matches!(
+                        chars.get(k.wrapping_sub(1)),
+                        Some('e') | Some('E')
+                    )
+                    && matches!(chars.get(k + 1), Some(x) if x.is_ascii_digit())
+                {
+                    k += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok {
+                kind: if is_float { TokKind::Float } else { TokKind::Int },
+                text: chars[i..k].iter().collect(),
+                line,
+                depth,
+            });
+            i = k;
+            continue;
+        }
+        // punctuation, one char at a time; braces drive depth
+        match c {
+            '{' => {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: "{".into(),
+                    line,
+                    depth,
+                });
+                depth += 1;
+            }
+            '}' => {
+                depth = depth.saturating_sub(1);
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: "}".into(),
+                    line,
+                    depth,
+                });
+            }
+            _ => {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: c.to_string(),
+                    line,
+                    depth,
+                });
+            }
+        }
+        i += 1;
+    }
+
+    let test_regions = find_test_regions(&toks);
+    let fns = find_fns(&toks);
+    let (allow_file, allow_lines) = collect_allows(&comments, &toks);
+    Lexed {
+        path: path.to_string(),
+        toks,
+        comments,
+        lines: text.lines().map(|l| l.to_string()).collect(),
+        fns,
+        test_regions,
+        allow_file,
+        allow_lines,
+    }
+}
+
+/// Scan a `"..."` literal starting at the opening quote. Returns the
+/// token, the index past the closing quote, and newlines consumed.
+fn scan_string(chars: &[char], start: usize, line: usize, depth: usize) -> (Tok, usize, usize) {
+    let n = chars.len();
+    let mut k = start + 1;
+    let mut content = String::new();
+    let mut newlines = 0usize;
+    while k < n {
+        match chars[k] {
+            '\\' => {
+                // keep escapes verbatim; rules only substring-match
+                content.push('\\');
+                if k + 1 < n {
+                    if chars[k + 1] == '\n' {
+                        newlines += 1;
+                    }
+                    content.push(chars[k + 1]);
+                }
+                k += 2;
+            }
+            '"' => {
+                k += 1;
+                break;
+            }
+            ch => {
+                if ch == '\n' {
+                    newlines += 1;
+                }
+                content.push(ch);
+                k += 1;
+            }
+        }
+    }
+    (Tok { kind: TokKind::Str, text: content, line, depth }, k, newlines)
+}
+
+/// Scan a `'x'` / `'\n'` literal from the opening quote; returns the
+/// token and the index past the closing quote.
+fn scan_char(chars: &[char], start: usize, line: usize, depth: usize) -> (Tok, usize) {
+    let n = chars.len();
+    let mut k = start + 1;
+    if k < n && chars[k] == '\\' {
+        k += 2; // escape + escaped char (unicode escapes handled below)
+    } else if k < n {
+        k += 1;
+    }
+    while k < n && chars[k] != '\'' {
+        k += 1; // tail of '\u{...}' style escapes
+    }
+    let content: String = chars[start + 1..k.min(n)].iter().collect();
+    (
+        Tok { kind: TokKind::Char, text: content, line, depth },
+        (k + 1).min(n),
+    )
+}
+
+/// Mark the brace-matched body following every `#[cfg(test)]` or
+/// `#[test]` attribute as a test region (line range, inclusive).
+fn find_test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut k = 0usize;
+    while k + 4 < toks.len() {
+        let is_attr = toks[k].text == "#" && toks[k + 1].text == "[";
+        if !is_attr {
+            k += 1;
+            continue;
+        }
+        let cfg_test = toks[k + 2].text == "cfg"
+            && toks[k + 3].text == "("
+            && toks[k + 4].text == "test";
+        let test_attr = toks[k + 2].text == "test" && toks[k + 3].text == "]";
+        if !(cfg_test || test_attr) {
+            k += 1;
+            continue;
+        }
+        let d = toks[k].depth;
+        // skip to the end of the attribute (bracket-balanced)
+        let mut j = k + 1;
+        let mut brackets = 0i32;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "[" => brackets += 1,
+                "]" => {
+                    brackets -= 1;
+                    if brackets == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        // the annotated item's body: first `{` at the attr's depth,
+        // unless a `;` at that depth ends the item first
+        let mut open = None;
+        for (idx, t) in toks.iter().enumerate().skip(j + 1) {
+            if t.kind == TokKind::Punct && t.depth == d {
+                if t.text == "{" {
+                    open = Some(idx);
+                    break;
+                }
+                if t.text == ";" {
+                    break;
+                }
+            }
+        }
+        if let Some(o) = open {
+            let close = toks
+                .iter()
+                .enumerate()
+                .skip(o + 1)
+                .find(|(_, t)| {
+                    t.kind == TokKind::Punct && t.text == "}" && t.depth == d
+                })
+                .map(|(idx, _)| idx)
+                .unwrap_or(toks.len() - 1);
+            regions.push((toks[o].line, toks[close].line));
+        }
+        k = j.max(k + 1);
+    }
+    regions
+}
+
+/// Locate every `fn` item with a body (trait-method declarations and
+/// `fn(..)` pointer types are skipped).
+fn find_fns(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut fns = Vec::new();
+    for k in 0..toks.len() {
+        if !(toks[k].kind == TokKind::Ident && toks[k].text == "fn") {
+            continue;
+        }
+        let Some(name_tok) = toks.get(k + 1) else { continue };
+        if name_tok.kind != TokKind::Ident {
+            continue; // `fn(args)` pointer type
+        }
+        let d = toks[k].depth;
+        let mut open = None;
+        for (idx, t) in toks.iter().enumerate().skip(k + 2) {
+            if t.kind == TokKind::Punct && t.depth == d {
+                if t.text == "{" {
+                    open = Some(idx);
+                    break;
+                }
+                if t.text == ";" {
+                    break; // bodyless declaration
+                }
+            }
+        }
+        let Some(o) = open else { continue };
+        let close = toks
+            .iter()
+            .enumerate()
+            .skip(o + 1)
+            .find(|(_, t)| t.kind == TokKind::Punct && t.text == "}" && t.depth == d)
+            .map(|(idx, _)| idx)
+            .unwrap_or(toks.len() - 1);
+        fns.push(FnSpan {
+            name: name_tok.text.clone(),
+            decl_line: toks[k].line,
+            body_start: o,
+            body_end: close,
+            start_line: toks[o].line,
+            end_line: toks[close].line,
+        });
+    }
+    fns
+}
+
+/// Parse `ftlint: allow(...)` / `allow-file(...)` directives from the
+/// comment stream. Line-scoped allows cover the directive's own line
+/// and the next line holding a code token.
+fn collect_allows(
+    comments: &[Comment],
+    toks: &[Tok],
+) -> (BTreeSet<String>, BTreeMap<usize, BTreeSet<String>>) {
+    let mut allow_file = BTreeSet::new();
+    let mut allow_lines: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    for c in comments {
+        let Some((file_scope, rules)) = parse_directive(&c.text) else {
+            continue;
+        };
+        if file_scope {
+            allow_file.extend(rules);
+            continue;
+        }
+        let mut covered = vec![c.line];
+        if let Some(t) = toks.iter().find(|t| t.line > c.line) {
+            covered.push(t.line);
+        }
+        for l in covered {
+            allow_lines.entry(l).or_default().extend(rules.iter().cloned());
+        }
+    }
+    (allow_file, allow_lines)
+}
+
+/// `(is_file_scope, rules)` for a directive comment, else None.
+fn parse_directive(text: &str) -> Option<(bool, Vec<String>)> {
+    // doc comments arrive as "/ ..." or "! ..." after the lexer strips //
+    let t = text
+        .trim_start_matches('/')
+        .trim_start_matches('!')
+        .trim_start();
+    let rest = t.strip_prefix("ftlint:")?.trim_start();
+    let (file_scope, rest) = match rest.strip_prefix("allow-file") {
+        Some(r) => (true, r),
+        None => (false, rest.strip_prefix("allow")?),
+    };
+    let inner = rest.trim_start().strip_prefix('(')?;
+    let end = inner.find(')')?;
+    let rules: Vec<String> = inner[..end]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    Some((file_scope, rules))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let lx = lex(
+            "x.rs",
+            "fn f() { let s = \"unwrap() panic!\"; // unwrap() here too\n}",
+        );
+        assert!(!lx.toks.iter().any(|t| t.kind == TokKind::Ident
+            && t.text == "unwrap"));
+        assert_eq!(
+            lx.toks.iter().filter(|t| t.kind == TokKind::Str).count(),
+            1
+        );
+        assert_eq!(lx.comments.len(), 1);
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_the_file() {
+        let lx = lex("x.rs", "fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(
+            lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).count(),
+            3
+        );
+        // the function body was still found
+        assert_eq!(lx.fns.len(), 1);
+        assert_eq!(lx.fns[0].name, "f");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let lx = lex("x.rs", "let a = 'x'; let b: &'static str = \"s\"; let c = '\\n';");
+        let chars: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 2);
+        assert_eq!(
+            lx.toks.iter().filter(|t| t.kind == TokKind::Lifetime).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_nested_block_comments() {
+        let lx = lex(
+            "x.rs",
+            "let s = r#\"has \"quotes\" and unwrap()\"#; /* outer /* inner */ still comment */ let t = 1;",
+        );
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Str
+            && t.text.contains("unwrap()")));
+        assert!(lx.toks.iter().any(|t| t.text == "t"));
+        assert_eq!(lx.comments.len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_region_covers_mod_body() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n";
+        let lx = lex("x.rs", src);
+        assert!(!lx.in_test(1));
+        assert!(lx.in_test(4));
+        assert!(lx.in_test(3) && lx.in_test(5));
+    }
+
+    #[test]
+    fn fn_spans_are_brace_matched() {
+        let src = "fn a() {\n    if x { y(); }\n}\nfn b() { z(); }\n";
+        let lx = lex("x.rs", src);
+        assert_eq!(lx.fns.len(), 2);
+        assert_eq!((lx.fns[0].decl_line, lx.fns[0].end_line), (1, 3));
+        assert_eq!((lx.fns[1].decl_line, lx.fns[1].end_line), (4, 4));
+        assert_eq!(lx.enclosing_fn(2).map(|f| f.name.as_str()), Some("a"));
+    }
+
+    #[test]
+    fn allow_directives_parse() {
+        let src = "// ftlint: allow-file(no-lock-hot-path): cold path\n\
+                   fn f() {\n\
+                       // ftlint: allow(no-panic-hot-path): guarded above\n\
+                       x.unwrap();\n\
+                   }\n";
+        let lx = lex("x.rs", src);
+        assert!(lx.is_suppressed("no-lock-hot-path", 1));
+        assert!(lx.is_suppressed("no-lock-hot-path", 999));
+        assert!(lx.is_suppressed("no-panic-hot-path", 4));
+        assert!(!lx.is_suppressed("no-panic-hot-path", 2));
+        assert!(!lx.is_suppressed("safety-comment", 4));
+    }
+
+    #[test]
+    fn comment_block_above_stops_at_code() {
+        let src = "fn noise() {}\n/// doc: relaxed counters\n#[inline]\nfn f() {}\n";
+        let lx = lex("x.rs", src);
+        let above = lx.comment_block_above(4);
+        assert_eq!(above.len(), 2);
+        assert!(above.iter().any(|l| l.contains("relaxed")));
+    }
+}

@@ -1,0 +1,211 @@
+//! In-tree static analysis: the `ftlint` invariant linter.
+//!
+//! TurboFFT's fault-tolerance story rests on code-level invariants the
+//! compiler cannot check: every detection emits exactly one audit
+//! `FaultEvent`, the telemetry hot path stays mutex-free, every
+//! `Metrics` counter reaches both exporters, request paths never panic.
+//! This module is the rule engine behind `cargo run --bin ftlint`
+//! (and the `ci.sh` lint lane) that enforces them on every tree.
+//!
+//! Layout:
+//! - [`lexer`] — std-only comment/string-aware Rust tokenizer;
+//! - [`rules`] — the six invariant rules (see docs/lint.md);
+//! - [`baseline`] — checked-in, content-matched acknowledgement list;
+//! - this file — findings model, suppression, human/JSON reports, and
+//!   the file-tree walker shared by the binary and the meta-test in
+//!   `tests/ftlint_suite.rs`.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// One source file handed to [`lint`]; `path` is reported verbatim.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based line
+    pub line: usize,
+    pub message: String,
+    /// trimmed source line, used for content-matched baselining
+    pub snippet: String,
+}
+
+/// Everything a caller needs to render or gate on a lint run.
+pub struct LintReport {
+    /// active findings (not suppressed, not baselined), sorted
+    pub findings: Vec<Finding>,
+    /// findings silenced by `ftlint: allow` directives
+    pub suppressed: usize,
+    /// findings absorbed by the baseline (via [`apply_baseline`])
+    pub baselined: usize,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Run every rule over `files`, applying in-source suppressions.
+pub fn lint(files: &[SourceFile]) -> LintReport {
+    let lexed: Vec<lexer::Lexed> = files
+        .iter()
+        .map(|f| lexer::lex(&f.path, &f.text))
+        .collect();
+    let by_path: BTreeMap<&str, &lexer::Lexed> =
+        lexed.iter().map(|lx| (lx.path.as_str(), lx)).collect();
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for f in rules::run_all(&lexed) {
+        let silenced = by_path
+            .get(f.path.as_str())
+            .map(|lx| lx.is_suppressed(f.rule, f.line))
+            .unwrap_or(false);
+        if silenced {
+            suppressed += 1;
+        } else {
+            findings.push(f);
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    LintReport { findings, suppressed, baselined: 0, files_scanned: files.len() }
+}
+
+/// Drop findings matched by `bl` from the report (counting them in
+/// `report.baselined`). Returns descriptions of baseline entries that
+/// matched nothing — stale debt the caller should warn about.
+pub fn apply_baseline(report: &mut LintReport, bl: &baseline::Baseline) -> Vec<String> {
+    let mut used = vec![false; bl.entries.len()];
+    let mut kept = Vec::with_capacity(report.findings.len());
+    for f in report.findings.drain(..) {
+        match bl.matches(&f) {
+            Some(i) => {
+                used[i] = true;
+                report.baselined += 1;
+            }
+            None => kept.push(f),
+        }
+    }
+    report.findings = kept;
+    let mut stale: Vec<String> = bl
+        .entries
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(e, _)| format!("{} | {} | {}", e.rule, e.path, e.content))
+        .collect();
+    stale.extend(bl.malformed.iter().map(|m| format!("malformed: {m}")));
+    stale
+}
+
+/// `path:line: [rule] message` lines plus a one-line summary.
+pub fn render_human(report: &LintReport) -> String {
+    let mut out = String::new();
+    for f in &report.findings {
+        out.push_str(&format!(
+            "{}:{}: [{}] {}\n    {}\n",
+            f.path, f.line, f.rule, f.message, f.snippet
+        ));
+    }
+    out.push_str(&format!(
+        "ftlint: {} file(s), {} finding(s), {} suppressed, {} baselined\n",
+        report.files_scanned,
+        report.findings.len(),
+        report.suppressed,
+        report.baselined
+    ));
+    out
+}
+
+/// Machine-readable report for the CI gate.
+pub fn render_json(report: &LintReport) -> String {
+    let findings = json::arr(report.findings.iter().map(|f| {
+        json::obj(vec![
+            ("rule", json::s(f.rule)),
+            ("path", json::s(&f.path)),
+            ("line", json::num(f.line as f64)),
+            ("message", json::s(&f.message)),
+            ("snippet", json::s(&f.snippet)),
+        ])
+    }));
+    let doc = json::obj(vec![
+        ("clean", Json::Bool(report.clean())),
+        ("files_scanned", json::num(report.files_scanned as f64)),
+        (
+            "rules",
+            json::arr(rules::RULES.iter().map(|r| json::s(r.name))),
+        ),
+        ("findings", findings),
+        ("suppressed", json::num(report.suppressed as f64)),
+        ("baselined", json::num(report.baselined as f64)),
+    ]);
+    format!("{doc}\n")
+}
+
+/// Recursively collect `.rs` files under each root (a root may also be
+/// a single file). Skips `target`, `vendor`, `.git`, `node_modules`.
+/// Paths are returned sorted, relative to how the root was given.
+pub fn collect_sources(roots: &[String]) -> io::Result<Vec<SourceFile>> {
+    let mut paths: Vec<String> = Vec::new();
+    for root in roots {
+        walk(Path::new(root), &mut paths)?;
+    }
+    paths.sort();
+    paths.dedup();
+    let mut out = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text = std::fs::read_to_string(&p)?;
+        out.push(SourceFile { path: p, text });
+    }
+    Ok(out)
+}
+
+fn walk(path: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    let meta = std::fs::metadata(path)?;
+    if meta.is_file() {
+        if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path.to_string_lossy().replace('\\', "/"));
+        }
+        return Ok(());
+    }
+    let skip = path
+        .file_name()
+        .map(|n| {
+            n == "target" || n == "vendor" || n == ".git" || n == "node_modules"
+        })
+        .unwrap_or(false);
+    if skip {
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(path)?
+        .collect::<io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for entry in entries {
+        let m = std::fs::metadata(&entry)?;
+        if m.is_dir() {
+            walk(&entry, out)?;
+        } else if entry.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(entry.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,487 @@
+//! The invariant rules behind `ftlint`.
+//!
+//! Each rule guards a code-level invariant that the ABFT guarantees of
+//! this repo rest on (see docs/lint.md for the catalog with rationale).
+//! Rules operate on the token stream from [`super::lexer`], so string
+//! literals and comments never produce false positives, and everything
+//! inside `#[cfg(test)]` / `#[test]` regions is exempt — the invariants
+//! protect production paths, not tests.
+//!
+//! Rules emit raw findings; suppression (`ftlint: allow`) and the
+//! baseline are applied centrally in [`super::lint`].
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Lexed, TokKind};
+use super::Finding;
+
+/// Static catalog entry; `ftlint --list-rules` and the JSON report
+/// enumerate these.
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+pub const RULES: [RuleInfo; 6] = [
+    RuleInfo {
+        name: "no-panic-hot-path",
+        summary: "unwrap/expect/panic!/unreachable! and unguarded indexing are banned on server, scheduler, and telemetry request paths",
+    },
+    RuleInfo {
+        name: "atomic-ordering-documented",
+        summary: "every Ordering::* use in telemetry/ and coordinator/metrics.rs needs an ordering-rationale comment on the enclosing fn",
+    },
+    RuleInfo {
+        name: "no-lock-hot-path",
+        summary: "Mutex/RwLock are banned in the lock-free telemetry/metrics modules",
+    },
+    RuleInfo {
+        name: "safety-comment",
+        summary: "every `unsafe` requires an adjacent // SAFETY: comment",
+    },
+    RuleInfo {
+        name: "exporter-parity",
+        summary: "every AtomicU64 counter in coordinator/metrics.rs must reach both exporters in telemetry/export.rs",
+    },
+    RuleInfo {
+        name: "fault-event-parity",
+        summary: "every scheduler.rs fn that flips a corrected/recomputed FtStatus must also record a FaultEvent",
+    },
+];
+
+/// Run every rule over the lexed file set.
+pub fn run_all(files: &[Lexed]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        no_panic_hot_path(f, &mut out);
+        atomic_ordering_documented(f, &mut out);
+        no_lock_hot_path(f, &mut out);
+        safety_comment(f, &mut out);
+        fault_event_parity(f, &mut out);
+    }
+    exporter_parity(files, &mut out);
+    out
+}
+
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+fn has_component(path: &str, comp: &str) -> bool {
+    norm(path).split('/').any(|c| c == comp)
+}
+
+fn file_name(path: &str) -> String {
+    norm(path).split('/').last().unwrap_or("").to_string()
+}
+
+fn finding(lx: &Lexed, rule: &'static str, line: usize, message: String) -> Finding {
+    Finding {
+        rule,
+        path: lx.path.clone(),
+        line,
+        message,
+        snippet: lx
+            .lines
+            .get(line.saturating_sub(1))
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default(),
+    }
+}
+
+/// Hot-path scope shared by `no-panic-hot-path`: the request-serving
+/// modules where a panic tears down a worker mid-request.
+fn panic_scope(path: &str) -> bool {
+    has_component(path, "server")
+        || has_component(path, "telemetry")
+        || (has_component(path, "coordinator") && file_name(path) == "scheduler.rs")
+}
+
+/// Lock-free scope shared by `no-lock-hot-path` and
+/// `atomic-ordering-documented`: the modules whose whole design point
+/// is mutex-free metric recording.
+fn lockfree_scope(path: &str) -> bool {
+    has_component(path, "telemetry")
+        || (has_component(path, "coordinator") && file_name(path) == "metrics.rs")
+}
+
+/// Rule 1: no unwrap/expect/panic-family/unguarded-indexing on request
+/// paths. Indexing is allowed when a nearby line (<= 6 above) shows a
+/// bounds guard (`len(`, `.get(`, `is_empty(`, `.first(`, `match `,
+/// `if let`, `assert`).
+fn no_panic_hot_path(lx: &Lexed, out: &mut Vec<Finding>) {
+    const RULE: &str = "no-panic-hot-path";
+    if !panic_scope(&lx.path) {
+        return;
+    }
+    let toks = &lx.toks;
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        if lx.in_test(t.line) {
+            continue;
+        }
+        // panic!/unreachable!/todo!/unimplemented! macro invocations
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+            && toks.get(k + 1).map(|n| n.text == "!").unwrap_or(false)
+        {
+            out.push(finding(
+                lx,
+                RULE,
+                t.line,
+                format!("`{}!` on a request path aborts the serving worker", t.text),
+            ));
+            continue;
+        }
+        // .unwrap( / .expect(  — exact method names, so unwrap_or_else
+        // (a distinct Ident token) never matches
+        if t.kind == TokKind::Punct
+            && t.text == "."
+            && toks
+                .get(k + 1)
+                .map(|n| n.kind == TokKind::Ident && (n.text == "unwrap" || n.text == "expect"))
+                .unwrap_or(false)
+            && toks.get(k + 2).map(|n| n.text == "(").unwrap_or(false)
+        {
+            let name = &toks[k + 1].text;
+            out.push(finding(
+                lx,
+                RULE,
+                t.line,
+                format!(
+                    "`.{name}()` on a request path; propagate the error or recover (e.g. unwrap_or_else(|e| e.into_inner()) for locks)"
+                ),
+            ));
+            continue;
+        }
+        // ident[<int>] without a visible guard above
+        if t.kind == TokKind::Ident
+            && toks.get(k + 1).map(|n| n.text == "[").unwrap_or(false)
+            && toks.get(k + 2).map(|n| n.kind == TokKind::Int).unwrap_or(false)
+            && toks.get(k + 3).map(|n| n.text == "]").unwrap_or(false)
+            && !index_guarded(lx, t.line)
+        {
+            out.push(finding(
+                lx,
+                RULE,
+                t.line,
+                format!(
+                    "indexing `{}[{}]` without a visible bounds guard; use .first()/.get() or guard on len()",
+                    t.text,
+                    toks[k + 2].text
+                ),
+            ));
+        }
+    }
+}
+
+/// Heuristic lookback for rule 1's indexing arm: any of the guard
+/// markers within the 6 raw lines above (inclusive of the line itself).
+fn index_guarded(lx: &Lexed, line: usize) -> bool {
+    let lo = line.saturating_sub(6).max(1);
+    for l in lo..=line {
+        let Some(s) = lx.lines.get(l - 1) else { continue };
+        if s.contains("len(")
+            || s.contains(".get(")
+            || s.contains("is_empty(")
+            || s.contains(".first(")
+            || s.contains("match ")
+            || s.contains("if let")
+            || s.contains("assert")
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Keywords accepted as an ordering rationale (case-insensitive).
+fn ordering_rationale(text: &str) -> bool {
+    let t = text.to_ascii_lowercase();
+    [
+        "relaxed", "acquire", "release", "seqcst", "seq_cst", "ordering",
+        "lock-free", "lock free", "monotonic",
+    ]
+    .iter()
+    .any(|k| t.contains(k))
+}
+
+/// Rule 2: every `Ordering::*` use in the lock-free modules must sit
+/// under an ordering-rationale comment — either inside the enclosing
+/// fn's body or in the comment/attribute block directly above its
+/// declaration. One finding per fn, anchored at the first use.
+fn atomic_ordering_documented(lx: &Lexed, out: &mut Vec<Finding>) {
+    const RULE: &str = "atomic-ordering-documented";
+    if !lockfree_scope(&lx.path) {
+        return;
+    }
+    let toks = &lx.toks;
+    let mut reported: BTreeSet<usize> = BTreeSet::new(); // fn decl lines
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        if !(t.kind == TokKind::Ident && t.text == "Ordering") {
+            continue;
+        }
+        if lx.in_test(t.line) {
+            continue;
+        }
+        if !(toks.get(k + 1).map(|n| n.text == ":").unwrap_or(false)
+            && toks.get(k + 2).map(|n| n.text == ":").unwrap_or(false))
+        {
+            continue;
+        }
+        let documented = match lx.enclosing_fn(t.line) {
+            Some(f) => {
+                if reported.contains(&f.decl_line) {
+                    continue;
+                }
+                let in_body = lx
+                    .comments_in(f.decl_line, f.end_line)
+                    .any(|c| ordering_rationale(&c.text));
+                let above = lx
+                    .comment_block_above(f.decl_line)
+                    .iter()
+                    .any(|l| ordering_rationale(l));
+                if !in_body && !above {
+                    reported.insert(f.decl_line);
+                }
+                in_body || above
+            }
+            // outside any fn (consts, statics): require a comment in
+            // the block directly above the use
+            None => lx
+                .comment_block_above(t.line)
+                .iter()
+                .any(|l| ordering_rationale(l)),
+        };
+        if !documented {
+            out.push(finding(
+                lx,
+                RULE,
+                t.line,
+                "Ordering::* without an ordering-rationale comment on the enclosing fn (say why this ordering is sufficient)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule 3: no blocking locks in the modules advertised as lock-free.
+/// File-level exemptions (`ftlint: allow-file`) carry the rationale for
+/// the two cold-path rings that do lock.
+fn no_lock_hot_path(lx: &Lexed, out: &mut Vec<Finding>) {
+    const RULE: &str = "no-lock-hot-path";
+    if !lockfree_scope(&lx.path) {
+        return;
+    }
+    let mut seen_lines: BTreeSet<usize> = BTreeSet::new();
+    for t in &lx.toks {
+        if t.kind == TokKind::Ident
+            && (t.text == "Mutex" || t.text == "RwLock")
+            && !lx.in_test(t.line)
+            && seen_lines.insert(t.line)
+        {
+            out.push(finding(
+                lx,
+                RULE,
+                t.line,
+                format!(
+                    "`{}` in a lock-free module; use atomics, or carry a rationale via `ftlint: allow-file`",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 4: `unsafe` needs `// SAFETY:` on the same line or in the
+/// comment block directly above. Applies to every scanned file.
+fn safety_comment(lx: &Lexed, out: &mut Vec<Finding>) {
+    const RULE: &str = "safety-comment";
+    let mut seen_lines: BTreeSet<usize> = BTreeSet::new();
+    for t in &lx.toks {
+        if !(t.kind == TokKind::Ident && t.text == "unsafe") {
+            continue;
+        }
+        if lx.in_test(t.line) || !seen_lines.insert(t.line) {
+            continue;
+        }
+        let same_line = lx
+            .lines
+            .get(t.line - 1)
+            .map(|l| l.contains("SAFETY"))
+            .unwrap_or(false);
+        let above = lx
+            .comment_block_above(t.line)
+            .iter()
+            .any(|l| l.contains("SAFETY"));
+        if !(same_line || above) {
+            out.push(finding(
+                lx,
+                RULE,
+                t.line,
+                "`unsafe` without an adjacent `// SAFETY:` comment stating the proof obligation".to_string(),
+            ));
+        }
+    }
+}
+
+/// Rule 6: in scheduler.rs, any fn whose body constructs a corrected /
+/// recomputed `FtStatus` must also reference the audit log (the
+/// `FaultEvent` type or the `push_recompute_event` helper) — the
+/// "every detection emits exactly one audit event" invariant.
+fn fault_event_parity(lx: &Lexed, out: &mut Vec<Finding>) {
+    const RULE: &str = "fault-event-parity";
+    if file_name(&lx.path) != "scheduler.rs" {
+        return;
+    }
+    for span in &lx.fns {
+        if lx.in_test(span.decl_line) {
+            continue;
+        }
+        let body = &lx.toks[span.body_start..=span.body_end];
+        let mut flip_line = None;
+        for (i, t) in body.iter().enumerate() {
+            if t.kind == TokKind::Ident
+                && t.text == "FtStatus"
+                && body.get(i + 1).map(|n| n.text == ":").unwrap_or(false)
+                && body.get(i + 2).map(|n| n.text == ":").unwrap_or(false)
+                && body
+                    .get(i + 3)
+                    .map(|n| {
+                        matches!(
+                            n.text.as_str(),
+                            "Corrected" | "TileCorrected" | "Recomputed"
+                        )
+                    })
+                    .unwrap_or(false)
+            {
+                flip_line = Some(t.line);
+                break;
+            }
+        }
+        let Some(flip) = flip_line else { continue };
+        let records = body.iter().any(|t| {
+            t.kind == TokKind::Ident
+                && (t.text == "FaultEvent" || t.text == "push_recompute_event")
+        });
+        if !records {
+            out.push(finding(
+                lx,
+                RULE,
+                span.decl_line,
+                format!(
+                    "fn `{}` flips a detection FtStatus (line {flip}) without recording a FaultEvent; every detection must emit exactly one audit event",
+                    span.name
+                ),
+            ));
+        }
+    }
+}
+
+/// Rule 5 (cross-file): every `AtomicU64` field of `struct Metrics` in
+/// coordinator/metrics.rs must appear as a string key inside
+/// `counter_list` in telemetry/export.rs, and both exporter fns
+/// (`prometheus`, `json_snapshot`) must consume `counter_list`. No-op
+/// unless both files are in the scan set.
+fn exporter_parity(files: &[Lexed], out: &mut Vec<Finding>) {
+    const RULE: &str = "exporter-parity";
+    let metrics = files
+        .iter()
+        .find(|f| norm(&f.path).ends_with("coordinator/metrics.rs"));
+    let export = files
+        .iter()
+        .find(|f| norm(&f.path).ends_with("telemetry/export.rs"));
+    let (Some(mf), Some(ef)) = (metrics, export) else { return };
+
+    // counter fields of `struct Metrics`: Ident `:` `AtomicU64`
+    let mut fields: Vec<(String, usize)> = Vec::new();
+    let toks = &mf.toks;
+    for k in 0..toks.len() {
+        if toks[k].kind == TokKind::Ident
+            && toks[k].text == "struct"
+            && toks.get(k + 1).map(|n| n.text == "Metrics").unwrap_or(false)
+        {
+            let d = toks[k].depth;
+            let open = toks
+                .iter()
+                .enumerate()
+                .skip(k + 2)
+                .find(|(_, t)| t.kind == TokKind::Punct && t.text == "{" && t.depth == d)
+                .map(|(i, _)| i);
+            let Some(o) = open else { break };
+            let close = toks
+                .iter()
+                .enumerate()
+                .skip(o + 1)
+                .find(|(_, t)| t.kind == TokKind::Punct && t.text == "}" && t.depth == d)
+                .map(|(i, _)| i)
+                .unwrap_or(toks.len() - 1);
+            for j in o..close {
+                if toks[j].kind == TokKind::Ident
+                    && toks.get(j + 1).map(|n| n.text == ":").unwrap_or(false)
+                    && toks
+                        .get(j + 2)
+                        .map(|n| n.kind == TokKind::Ident && n.text == "AtomicU64")
+                        .unwrap_or(false)
+                {
+                    fields.push((toks[j].text.clone(), toks[j].line));
+                }
+            }
+            break;
+        }
+    }
+
+    match ef.fns.iter().find(|f| f.name == "counter_list") {
+        None => out.push(finding(
+            ef,
+            RULE,
+            1,
+            "telemetry/export.rs has no `counter_list` fn; exporters cannot share the counter set".to_string(),
+        )),
+        Some(span) => {
+            let strs: BTreeSet<&str> = ef.toks[span.body_start..=span.body_end]
+                .iter()
+                .filter(|t| t.kind == TokKind::Str)
+                .map(|t| t.text.as_str())
+                .collect();
+            for (name, line) in &fields {
+                if !strs.contains(name.as_str()) {
+                    out.push(finding(
+                        mf,
+                        RULE,
+                        *line,
+                        format!(
+                            "Metrics counter `{name}` is not listed in telemetry/export.rs counter_list; it would silently vanish from both exporters"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    for exporter in ["prometheus", "json_snapshot"] {
+        match ef.fns.iter().find(|f| f.name == exporter) {
+            None => out.push(finding(
+                ef,
+                RULE,
+                1,
+                format!("exporter fn `{exporter}` missing from telemetry/export.rs"),
+            )),
+            Some(span) => {
+                let uses = ef.toks[span.body_start..=span.body_end]
+                    .iter()
+                    .any(|t| t.kind == TokKind::Ident && t.text == "counter_list");
+                if !uses {
+                    out.push(finding(
+                        ef,
+                        RULE,
+                        span.decl_line,
+                        format!(
+                            "exporter fn `{exporter}` does not consume counter_list; counters can drift between exporters"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! `ftlint` — the in-tree invariant linter (see docs/lint.md).
+//!
+//!     cargo run --release --bin ftlint -- rust/src --json
+//!
+//! Usage: ftlint <path>... [--json] [--baseline FILE] [--no-baseline]
+//!                         [--list-rules]
+//!
+//! Exit codes: 0 clean (modulo suppressions + baseline), 1 findings,
+//! 2 usage or I/O error.
+//!
+//! The baseline defaults to `ftlint.baseline` in the current directory
+//! when the file exists; `--no-baseline` ignores it, `--baseline FILE`
+//! points elsewhere. Stale baseline entries are warnings on stderr,
+//! never failures — debt paydown should not break the build.
+
+use std::process::ExitCode;
+
+use turbofft::analysis::{self, baseline::Baseline, rules};
+
+const USAGE: &str = "usage: ftlint <path>... [--json] [--baseline FILE] [--no-baseline] [--list-rules]";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut roots: Vec<String> = Vec::new();
+    let mut json_out = false;
+    let mut baseline_path: Option<String> = None;
+    let mut no_baseline = false;
+    let mut list_rules = false;
+    let mut it = argv.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--json" => json_out = true,
+            "--no-baseline" => no_baseline = true,
+            "--list-rules" => list_rules = true,
+            "--baseline" => match it.next() {
+                Some(p) => baseline_path = Some(p),
+                None => {
+                    eprintln!("ftlint: --baseline needs a file argument\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with("--") => {
+                eprintln!("ftlint: unknown flag {flag}\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            path => roots.push(path.to_string()),
+        }
+    }
+
+    if list_rules {
+        for r in &rules::RULES {
+            println!("{:<28} {}", r.name, r.summary);
+        }
+        return ExitCode::SUCCESS;
+    }
+    if roots.is_empty() {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    }
+
+    let files = match analysis::collect_sources(&roots) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("ftlint: cannot read sources: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut report = analysis::lint(&files);
+
+    let bl_path = if no_baseline {
+        None
+    } else {
+        baseline_path.or_else(|| {
+            let default = "ftlint.baseline".to_string();
+            std::path::Path::new(&default).exists().then_some(default)
+        })
+    };
+    if let Some(p) = bl_path {
+        match Baseline::load(&p) {
+            Ok(bl) => {
+                for stale in analysis::apply_baseline(&mut report, &bl) {
+                    eprintln!("ftlint: stale baseline entry ({p}): {stale}");
+                }
+            }
+            Err(e) => {
+                eprintln!("ftlint: cannot read baseline {p}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    if json_out {
+        print!("{}", analysis::render_json(&report));
+    } else {
+        print!("{}", analysis::render_human(&report));
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -32,6 +32,10 @@ pub struct Metrics {
     pub server_timed_out: AtomicU64,
     /// HTTP front end: malformed or oversized requests (400, 413)
     pub server_malformed: AtomicU64,
+    /// HTTP front end: coalesced socket writes — one per readable burst
+    /// under keep-alive pipelining, not one per response (see
+    /// `server/http.rs` write buffering)
+    pub server_flushes: AtomicU64,
     /// spans, fault-event audit log, per-stage histograms
     pub telemetry: Telemetry,
     /// end-to-end request latency, nanoseconds
@@ -51,6 +55,8 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, size: usize, padded: usize) {
+        // Relaxed RMWs: independent counters, no cross-field consistency
+        // needed by any reader.
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padded_signals.fetch_add(padded as u64, Ordering::Relaxed);
         self.batch_sizes.record(size as u64);
@@ -71,6 +77,8 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        // Relaxed loads throughout: a human-readable summary tolerates
+        // counters sampled at slightly different instants.
         let lat = self.latency_snapshot();
         let ms = 1e3;
         let stage_line = |name: &str, h: &AtomicHistogram| {

@@ -193,7 +193,11 @@ impl Engine {
             inputs.push(desc.to_tensor());
         }
         let resp = self.device.execute(&entry.name, inputs)?;
-        let y = resp.outputs[0].to_complex()?;
+        let first = resp
+            .outputs
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("device returned no outputs"))?;
+        let y = first.to_complex()?;
         let end = tele.spans.now_ns();
         tele.stage_encode.record(end.saturating_sub(sp.start_ns));
         tele.spans.finish_at(sp, end);
@@ -375,6 +379,10 @@ impl Engine {
 
     /// Re-execute the packed batch once (injection disabled) and respond
     /// from the clean outputs — the one-sided/time-redundant path.
+    // ftlint: allow(fault-event-parity): the audit FaultEvent for every
+    // tile entering this path is pushed by `settle` via
+    // `push_recompute_event` before dispatch; emitting another here
+    // would double-count the detection.
     fn recompute_tile_inner(
         &mut self,
         entry: &Entry,
@@ -401,10 +409,15 @@ impl Engine {
                 inputs.push(InjectionDescriptor::NONE.to_tensor());
             }
             match self.device.execute(&entry.name, inputs) {
-                Ok(resp) => match resp.outputs[0].to_complex() {
-                    Ok(yy) => *cache = Some(yy),
-                    Err(e) => {
+                Ok(resp) => match resp.outputs.first().map(|o| o.to_complex()) {
+                    Some(Ok(yy)) => *cache = Some(yy),
+                    Some(Err(e)) => {
                         fail_all(&self.metrics, waiters, &format!("recompute unpack: {e}"));
+                        return;
+                    }
+                    None => {
+                        fail_all(&self.metrics, waiters,
+                                 "recompute: device returned no outputs");
                         return;
                     }
                 },
@@ -429,7 +442,13 @@ impl Engine {
             }
             self.metrics.recomputed.fetch_add(1, Ordering::Relaxed);
         }
-        let yy = cache.as_ref().unwrap();
+        let Some(yy) = cache.as_ref() else {
+            // unreachable by construction (the block above always fills
+            // or returns), but a missing cache must fail the requests,
+            // not the worker
+            fail_all(&self.metrics, waiters, "recompute cache missing");
+            return;
+        };
         respond_tile(&self.metrics, &yy[tile * bs * n..(tile + 1) * bs * n],
                      n, waiters, FtStatus::Recomputed, residual);
     }
@@ -450,8 +469,13 @@ impl Engine {
         let deltas = match self
             .device
             .execute(&corr.name, vec![c2, yc2])
-            .and_then(|r| r.outputs[0].to_complex())
-        {
+            .and_then(|r| {
+                let first = r
+                    .outputs
+                    .first()
+                    .ok_or_else(|| anyhow::anyhow!("correction returned no outputs"))?;
+                first.to_complex()
+            }) {
             Ok(d) => d,
             Err(e) => {
                 for item in group.items {

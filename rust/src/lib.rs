@@ -2,6 +2,7 @@
 //! tolerance — full-system reproduction of Wu et al. (2024) as a
 //! three-layer rust + JAX + Pallas stack. See DESIGN.md.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod faults;
 pub mod perfmodel;

@@ -75,16 +75,30 @@ pub struct Limits {
     pub max_body: usize,
 }
 
+/// Buffered responses are force-flushed past this size even mid-burst,
+/// so a pipelined client cannot make the out-buffer grow without bound.
+const FLUSH_THRESHOLD: usize = 64 * 1024;
+
 /// A connection wrapper owning the read buffer so pipelined bytes left
-/// over after one request's body are the start of the next request.
+/// over after one request's body are the start of the next request,
+/// and the write buffer so pipelined responses coalesce into one
+/// socket write per readable burst (see [`HttpConn::flush_output`]).
 pub struct HttpConn {
     stream: TcpStream,
     buf: Vec<u8>,
+    /// serialized-but-unflushed responses
+    out: Vec<u8>,
+    flushes: u64,
 }
 
 impl HttpConn {
     pub fn new(stream: TcpStream) -> Self {
-        Self { stream, buf: Vec::with_capacity(1024) }
+        Self {
+            stream,
+            buf: Vec::with_capacity(1024),
+            out: Vec::new(),
+            flushes: 0,
+        }
     }
 
     pub fn stream(&self) -> &TcpStream {
@@ -167,6 +181,10 @@ impl HttpConn {
                 )));
             }
             let started = !self.buf.is_empty();
+            // About to block on the socket: everything the client has
+            // pipelined so far is answered, so flush the burst now (also
+            // prevents the read/write deadlock where both sides wait).
+            self.flush_output().map_err(|e| ParseError::Io(e.to_string()))?;
             let mut chunk = [0u8; 4096];
             match self.stream.read(&mut chunk) {
                 Ok(0) => {
@@ -193,6 +211,8 @@ impl HttpConn {
         let from_buf = len.min(self.buf.len());
         let mut body: Vec<u8> = self.buf.drain(..from_buf).collect();
         while body.len() < len {
+            // as in fill_until_headers: drain our side before blocking
+            self.flush_output().map_err(|e| ParseError::Io(e.to_string()))?;
             let mut chunk = [0u8; 4096];
             let want = (len - body.len()).min(chunk.len());
             match self.stream.read(&mut chunk[..want]) {
@@ -209,7 +229,11 @@ impl HttpConn {
         Ok(body)
     }
 
-    /// Serialize and flush one response.
+    /// Serialize one response into the write buffer. The bytes reach
+    /// the socket when the burst is flushed — before the next blocking
+    /// read, on a closing response, past [`FLUSH_THRESHOLD`], or on
+    /// drop — so a pipelined burst costs one `write` syscall, not one
+    /// per response.
     pub fn write_response(&mut self, resp: &Response) -> io::Result<()> {
         let mut head = format!(
             "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
@@ -226,9 +250,37 @@ impl HttpConn {
         } else {
             "connection: keep-alive\r\n\r\n"
         });
-        self.stream.write_all(head.as_bytes())?;
-        self.stream.write_all(&resp.body)?;
+        self.out.extend_from_slice(head.as_bytes());
+        self.out.extend_from_slice(&resp.body);
+        if resp.close || self.out.len() >= FLUSH_THRESHOLD {
+            self.flush_output()?;
+        }
+        Ok(())
+    }
+
+    /// Write the buffered responses to the socket in one `write_all`.
+    /// No-op when nothing is buffered.
+    pub fn flush_output(&mut self) -> io::Result<()> {
+        if self.out.is_empty() {
+            return Ok(());
+        }
+        self.stream.write_all(&self.out)?;
+        self.out.clear();
+        self.flushes += 1;
         self.stream.flush()
+    }
+
+    /// Coalesced socket writes so far (feeds the `server_flushes`
+    /// metric).
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+}
+
+impl Drop for HttpConn {
+    fn drop(&mut self) {
+        // Deliver anything still buffered before the socket closes.
+        let _ = self.flush_output();
     }
 }
 
@@ -420,7 +472,7 @@ mod tests {
         let resp = Response::json(200, "{\"ok\":true}")
             .with_header("retry-after", "1");
         s.write_response(&resp).unwrap();
-        drop(s);
+        drop(s); // drop flushes the buffered response
         let mut got = String::new();
         use std::io::Read as _;
         c.read_to_string(&mut got).unwrap();
@@ -428,5 +480,46 @@ mod tests {
         assert!(got.contains("content-length: 11"));
         assert!(got.contains("retry-after: 1"));
         assert!(got.ends_with("{\"ok\":true}"));
+    }
+
+    #[test]
+    fn pipelined_responses_coalesce_into_one_flush() {
+        let (mut c, mut s) = pair();
+        // two pipelined requests arrive in one client write
+        c.write_all(
+            b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n",
+        )
+        .unwrap();
+        for _ in 0..2 {
+            let _ = s.read_request(LIMITS).unwrap();
+            s.write_response(&Response::text(200, "ok")).unwrap();
+        }
+        // both responses are still buffered: no socket write yet
+        assert_eq!(s.flushes(), 0);
+        s.flush_output().unwrap();
+        assert_eq!(s.flushes(), 1);
+        // a second flush with nothing buffered is a no-op
+        s.flush_output().unwrap();
+        assert_eq!(s.flushes(), 1);
+        drop(s);
+        let mut got = String::new();
+        use std::io::Read as _;
+        c.read_to_string(&mut got).unwrap();
+        assert_eq!(got.matches("HTTP/1.1 200 OK").count(), 2, "{got}");
+    }
+
+    #[test]
+    fn closing_response_flushes_immediately() {
+        let (mut c, mut s) = pair();
+        c.write_all(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        let _ = s.read_request(LIMITS).unwrap();
+        s.write_response(&Response::text(503, "bye").closing()).unwrap();
+        assert_eq!(s.flushes(), 1);
+        drop(s);
+        let mut got = String::new();
+        use std::io::Read as _;
+        c.read_to_string(&mut got).unwrap();
+        assert!(got.starts_with("HTTP/1.1 503"), "{got}");
+        assert!(got.contains("connection: close"));
     }
 }

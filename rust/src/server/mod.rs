@@ -20,7 +20,8 @@
 //!
 //! Every request flows through the same lock-free [`Metrics`] the
 //! trace-replay path uses; the server adds the `server_accepted`,
-//! `server_shed`, `server_timed_out`, and `server_malformed` counters.
+//! `server_shed`, `server_timed_out`, `server_malformed`, and
+//! `server_flushes` counters.
 
 pub mod http;
 pub mod pool;
@@ -138,7 +139,10 @@ impl FftBackend for CoordinatorBackend {
         deadline: Duration,
     ) -> Vec<Result<FftResponse, BackendError>> {
         let rxs: Vec<_> = {
-            let coord = self.coord.lock().unwrap();
+            // recover from poison: a panicked worker mid-submit leaves
+            // the coordinator usable (submit is a channel send)
+            let coord =
+                self.coord.lock().unwrap_or_else(|e| e.into_inner());
             signals
                 .into_iter()
                 .map(|data| coord.submit(precision, data))
@@ -167,7 +171,10 @@ impl FftBackend for CoordinatorBackend {
     }
 
     fn quiesce(&self) {
-        self.coord.lock().unwrap().quiesce();
+        self.coord
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .quiesce();
     }
 }
 

@@ -225,7 +225,12 @@ fn acceptor_loop(listener: TcpListener, shared: &Shared) {
                 // Shed happens BEFORE parsing: the point of admission
                 // control is to spend ~nothing on rejected load.
                 let shed = {
-                    let mut q = shared.queue.lock().unwrap();
+                    // recover from a poisoned queue: a panicked worker
+                    // must not take the acceptor down with it
+                    let mut q = shared
+                        .queue
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner());
                     if q.len() >= shared.cfg.queue_cap {
                         Some(stream)
                     } else {
@@ -275,7 +280,7 @@ fn reject(stream: TcpStream, resp: Response) {
 fn worker_loop(shared: &Shared) {
     loop {
         let admitted = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if let Some(c) = q.pop_front() {
                     break c;
@@ -286,7 +291,7 @@ fn worker_loop(shared: &Shared) {
                 let (guard, _timeout) = shared
                     .ready
                     .wait_timeout(q, Duration::from_millis(100))
-                    .unwrap();
+                    .unwrap_or_else(|e| e.into_inner());
                 q = guard;
             }
         };
@@ -296,7 +301,6 @@ fn worker_loop(shared: &Shared) {
 
 fn handle_connection(shared: &Shared, admitted: Admitted) {
     let cfg = &shared.cfg;
-    let metrics = shared.metrics();
     if let Some(d) = cfg.handler_delay {
         std::thread::sleep(d);
     }
@@ -304,6 +308,23 @@ fn handle_connection(shared: &Shared, admitted: Admitted) {
     let _ = stream.set_read_timeout(Some(cfg.read_timeout));
     let _ = stream.set_write_timeout(Some(cfg.write_timeout));
     let mut conn = HttpConn::new(stream);
+    serve_conn(shared, &mut conn, at);
+    // Deliver whatever the last burst left buffered, then account for
+    // the connection's coalesced writes in one relaxed add.
+    let _ = conn.flush_output();
+    shared
+        .metrics()
+        .server_flushes
+        .fetch_add(conn.flushes(), Ordering::Relaxed);
+}
+
+/// The keep-alive request loop for one admitted connection. Responses
+/// are buffered by `HttpConn` and flushed once per readable burst (or
+/// on close); the caller drains the final burst and records the flush
+/// count.
+fn serve_conn(shared: &Shared, conn: &mut HttpConn, at: Instant) {
+    let cfg = &shared.cfg;
+    let metrics = shared.metrics();
 
     // Stale admission: the connection waited out its deadline in the
     // queue; cancel before any parsing or batching happens.

@@ -9,6 +9,9 @@
 //! events are overwritten under sustained fault load) and dump as JSON
 //! lines for the campaign/report tooling.
 
+// ftlint: allow-file(no-lock-hot-path): pushes happen at fault
+// granularity (rare by construction); the clean-request hot path never
+// touches this mutex.
 use std::sync::Mutex;
 
 use crate::util::json::{self, Json};
@@ -111,16 +114,16 @@ impl FaultLog {
     }
 
     pub fn push(&self, ev: FaultEvent) {
-        self.ring.lock().unwrap().push(ev);
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
     }
 
     /// Retained events, oldest first.
     pub fn snapshot(&self) -> Vec<FaultEvent> {
-        self.ring.lock().unwrap().snapshot()
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).snapshot()
     }
 
     pub fn len(&self) -> usize {
-        self.ring.lock().unwrap().len()
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -129,11 +132,11 @@ impl FaultLog {
 
     /// Total events ever pushed (monotonic across wraparound).
     pub fn total_recorded(&self) -> u64 {
-        self.ring.lock().unwrap().total()
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).total()
     }
 
     pub fn capacity(&self) -> usize {
-        self.ring.lock().unwrap().capacity()
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).capacity()
     }
 
     /// JSON-lines dump of the retained events (one object per line).

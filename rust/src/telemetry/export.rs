@@ -21,6 +21,12 @@ const QUANTILES: [(f64, &str); 3] = [(50.0, "0.5"), (95.0, "0.95"), (99.0, "0.99
 /// embeds (the full rings stay queryable in-process).
 const SNAPSHOT_TAIL: usize = 64;
 
+/// The single source of truth for counter export: both exporters
+/// consume this list, so a counter added here reaches Prometheus and
+/// the JSON snapshot together (the `exporter-parity` lint checks that
+/// every `Metrics` field is listed). All loads are relaxed — these are
+/// independent monotonic counters with no cross-field consistency
+/// requirement.
 fn counter_list(m: &Metrics) -> Vec<(&'static str, u64)> {
     let t = &m.telemetry;
     vec![
@@ -38,6 +44,7 @@ fn counter_list(m: &Metrics) -> Vec<(&'static str, u64)> {
         ("server_shed", m.server_shed.load(Ordering::Relaxed)),
         ("server_timed_out", m.server_timed_out.load(Ordering::Relaxed)),
         ("server_malformed", m.server_malformed.load(Ordering::Relaxed)),
+        ("server_flushes", m.server_flushes.load(Ordering::Relaxed)),
         ("copies_saved", t.copies_saved()),
         ("spans_recorded", t.spans.total_recorded()),
         ("fault_events_recorded", t.faults.total_recorded()),
@@ -334,6 +341,7 @@ mod tests {
         assert!(text.contains("turbofft_server_shed_total 2"));
         assert!(text.contains("turbofft_server_timed_out_total 0"));
         assert!(text.contains("turbofft_server_malformed_total 0"));
+        assert!(text.contains("turbofft_server_flushes_total 0"));
         let v = json::parse(&json_snapshot(&m).to_string()).unwrap();
         let c = v.get("counters").unwrap();
         assert_eq!(c.get("server_accepted").unwrap().as_usize(), Some(5));

@@ -68,12 +68,10 @@ impl Default for AtomicHistogram {
 
 impl AtomicHistogram {
     pub fn new() -> Self {
-        // `AtomicU64` is not Copy; build the boxed array via a Vec.
-        let v: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
-        let buckets: Box<[AtomicU64; BUCKETS]> = match v.into_boxed_slice().try_into() {
-            Ok(b) => b,
-            Err(_) => unreachable!("Vec built with BUCKETS elements"),
-        };
+        // `AtomicU64` is not Copy; array::map builds the fixed-size
+        // array element by element with no fallible conversion.
+        let buckets: Box<[AtomicU64; BUCKETS]> =
+            Box::new([(); BUCKETS].map(|_| AtomicU64::new(0)));
         Self {
             buckets,
             count: AtomicU64::new(0),
@@ -95,14 +93,18 @@ impl AtomicHistogram {
         self.record(d.as_nanos().min(u64::MAX as u128) as u64);
     }
 
+    /// Relaxed load: `count` is an independent monotonic counter with
+    /// no cross-field consistency requirement.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Relaxed load: `sum` is an independent monotonic counter.
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
     }
 
+    /// Relaxed load: `max` only ever grows; readers tolerate staleness.
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
     }
@@ -125,6 +127,8 @@ impl AtomicHistogram {
     }
 
     /// Fold another histogram into this one (cross-thread merge).
+    /// All relaxed RMWs: buckets are independent counters and merge
+    /// tolerates concurrent records landing on either side.
     pub fn merge(&self, other: &AtomicHistogram) {
         for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
             let n = theirs.load(Ordering::Relaxed);
@@ -141,8 +145,9 @@ impl AtomicHistogram {
     pub fn snapshot(&self) -> HistogramSnapshot {
         let buckets: Vec<u64> =
             self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        // Derive count from the bucket sum so the snapshot is internally
-        // consistent even if a concurrent record landed between loads.
+        // Relaxed loads: deriving count from the bucket sum keeps the
+        // snapshot internally consistent even if a concurrent record
+        // landed between loads, so no stronger ordering is needed.
         let count = buckets.iter().sum();
         HistogramSnapshot {
             buckets,

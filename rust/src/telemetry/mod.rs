@@ -121,6 +121,8 @@ impl Telemetry {
         self.spans.now_ns()
     }
 
+    /// Relaxed load: an independent statistics counter, never used to
+    /// publish other memory.
     pub fn copies_saved(&self) -> u64 {
         self.copies_saved.load(Ordering::Relaxed)
     }

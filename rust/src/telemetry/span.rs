@@ -19,6 +19,8 @@
 //! per batch — never per request). Timeline queries read `snapshot()`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+// ftlint: allow-file(no-lock-hot-path): the ring lock is taken once per
+// finished span (a handful of times per batch), never per request.
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -100,6 +102,8 @@ impl SpanRecorder {
         parent: Option<SpanId>,
         start_ns: u64,
     ) -> ActiveSpan {
+        // Relaxed: ids only need to be unique and monotonic per the RMW
+        // itself; no other memory is published through this counter.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         ActiveSpan { id, parent, name, start_ns }
     }
@@ -120,22 +124,22 @@ impl SpanRecorder {
             start_ns: span.start_ns,
             end_ns: end_ns.max(span.start_ns),
         };
-        self.ring.lock().unwrap().push(rec);
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).push(rec);
         id
     }
 
     /// Completed spans currently retained, in completion order.
     pub fn snapshot(&self) -> Vec<Span> {
-        self.ring.lock().unwrap().snapshot()
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).snapshot()
     }
 
     /// Total spans ever recorded (monotonic, survives ring wraparound).
     pub fn total_recorded(&self) -> u64 {
-        self.ring.lock().unwrap().total()
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).total()
     }
 
     pub fn capacity(&self) -> usize {
-        self.ring.lock().unwrap().capacity()
+        self.ring.lock().unwrap_or_else(|e| e.into_inner()).capacity()
     }
 }
 

@@ -1,0 +1,395 @@
+//! Fixture suite for the `ftlint` invariant linter: one positive, one
+//! negative, and (where it applies) one suppressed case per rule, plus
+//! the meta-test that the live `rust/src` tree lints clean modulo the
+//! checked-in baseline — which is the same gate `ci.sh` runs via
+//! `cargo run --bin ftlint`.
+
+use turbofft::analysis::{self, baseline, baseline::Baseline, rules, SourceFile};
+use turbofft::util::json::{self, Json};
+
+fn lint_one(path: &str, text: &str) -> analysis::LintReport {
+    analysis::lint(&[SourceFile { path: path.to_string(), text: text.to_string() }])
+}
+
+fn findings_for<'a>(
+    report: &'a analysis::LintReport,
+    rule: &str,
+) -> Vec<&'a analysis::Finding> {
+    report.findings.iter().filter(|f| f.rule == rule).collect()
+}
+
+// ---- no-panic-hot-path -------------------------------------------------
+
+#[test]
+fn no_panic_flags_unwrap_panic_and_unguarded_index() {
+    let src = "\
+fn serve(v: &[u8]) -> u8 {
+    let x = v.iter().next().unwrap();
+    if *x == 0 {
+        panic!(\"boom\");
+    }
+    let w = [1u8, 2];
+    w[0]
+}
+";
+    let report = lint_one("rust/src/server/demo.rs", src);
+    let hits = findings_for(&report, "no-panic-hot-path");
+    assert_eq!(hits.len(), 3, "{}", analysis::render_human(&report));
+    assert_eq!(hits[0].line, 2); // .unwrap()
+    assert_eq!(hits[1].line, 4); // panic!
+    assert_eq!(hits[2].line, 7); // w[0]
+    assert!(hits[0].message.contains("unwrap"));
+    assert!(hits[2].snippet.contains("w[0]"));
+}
+
+#[test]
+fn no_panic_accepts_recovery_guards_and_out_of_scope_files() {
+    // recovery idioms and guarded indexing are all fine
+    let ok = "\
+fn serve(v: &[u8]) -> u8 {
+    let g = lock.lock().unwrap_or_else(|e| e.into_inner());
+    if v.len() > 1 {
+        return v[1];
+    }
+    *v.first().unwrap_or(&0)
+}
+";
+    let report = lint_one("rust/src/server/demo.rs", ok);
+    assert!(
+        findings_for(&report, "no-panic-hot-path").is_empty(),
+        "{}",
+        analysis::render_human(&report)
+    );
+    // the same panicking code outside the hot-path scope is not flagged
+    let panicky = "fn f() { x.unwrap(); panic!(\"fine here\"); }\n";
+    let report = lint_one("rust/src/signal/demo.rs", panicky);
+    assert!(findings_for(&report, "no-panic-hot-path").is_empty());
+}
+
+#[test]
+fn no_panic_exempts_tests_and_honors_allow() {
+    let src = "\
+fn serve() {
+    // ftlint: allow(no-panic-hot-path): invariant upheld by caller
+    x.unwrap();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        y.unwrap();
+        panic!(\"test code may panic\");
+    }
+}
+";
+    let report = lint_one("rust/src/server/demo.rs", src);
+    assert!(report.findings.is_empty(), "{}", analysis::render_human(&report));
+    assert_eq!(report.suppressed, 1);
+}
+
+// ---- atomic-ordering-documented ----------------------------------------
+
+#[test]
+fn atomic_ordering_requires_rationale_once_per_fn() {
+    let src = "\
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+    c.fetch_add(1, Ordering::Relaxed);
+}
+";
+    let report = lint_one("rust/src/telemetry/demo.rs", src);
+    let hits = findings_for(&report, "atomic-ordering-documented");
+    // two uses in one undocumented fn -> one finding, at the first use
+    assert_eq!(hits.len(), 1, "{}", analysis::render_human(&report));
+    assert_eq!(hits[0].line, 2);
+}
+
+#[test]
+fn atomic_ordering_accepts_doc_or_body_rationale() {
+    let doc_above = "\
+/// Relaxed: independent monotonic counter.
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+";
+    let in_body = "\
+fn bump(c: &AtomicU64) {
+    // Relaxed is enough: nothing is published through this counter.
+    c.fetch_add(1, Ordering::Relaxed);
+}
+";
+    for src in [doc_above, in_body] {
+        let report = lint_one("rust/src/telemetry/demo.rs", src);
+        assert!(
+            findings_for(&report, "atomic-ordering-documented").is_empty(),
+            "{}",
+            analysis::render_human(&report)
+        );
+    }
+    // out of scope: server code may use orderings without the comment
+    let report = lint_one(
+        "rust/src/server/demo.rs",
+        "fn f(c: &AtomicU64) { c.load(Ordering::Acquire); }\n",
+    );
+    assert!(findings_for(&report, "atomic-ordering-documented").is_empty());
+}
+
+// ---- no-lock-hot-path --------------------------------------------------
+
+#[test]
+fn no_lock_flags_mutex_in_lockfree_modules() {
+    let src = "\
+use std::sync::Mutex;
+pub struct Thing {
+    ring: Mutex<Vec<u64>>,
+}
+";
+    let report = lint_one("rust/src/telemetry/demo.rs", src);
+    let hits = findings_for(&report, "no-lock-hot-path");
+    assert_eq!(hits.len(), 2, "{}", analysis::render_human(&report));
+    assert_eq!(hits[0].line, 1);
+    assert_eq!(hits[1].line, 3);
+}
+
+#[test]
+fn no_lock_is_scoped_and_allow_file_carries_rationale() {
+    // locks outside the lock-free modules are not this rule's business
+    let report = lint_one(
+        "rust/src/server/pool.rs",
+        "use std::sync::Mutex;\nstruct S { q: Mutex<u8> }\n",
+    );
+    assert!(findings_for(&report, "no-lock-hot-path").is_empty());
+    // allow-file silences the whole file (the cold-path ring pattern)
+    let src = "\
+// ftlint: allow-file(no-lock-hot-path): ring locked once per batch
+use std::sync::Mutex;
+struct S {
+    ring: Mutex<u8>,
+}
+";
+    let report = lint_one("rust/src/telemetry/demo.rs", src);
+    assert!(report.findings.is_empty(), "{}", analysis::render_human(&report));
+    assert_eq!(report.suppressed, 2);
+}
+
+// ---- safety-comment ----------------------------------------------------
+
+#[test]
+fn safety_comment_required_for_unsafe() {
+    let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    let report = lint_one("rust/src/runtime/demo.rs", bad);
+    let hits = findings_for(&report, "safety-comment");
+    assert_eq!(hits.len(), 1, "{}", analysis::render_human(&report));
+    assert_eq!(hits[0].line, 2);
+
+    let good_above = "\
+fn f(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p points at a live byte.
+    unsafe { *p }
+}
+";
+    let good_same_line = "fn f(p: *const u8) -> u8 {\n    unsafe { *p } // SAFETY: p is valid\n}\n";
+    for src in [good_above, good_same_line] {
+        let report = lint_one("rust/src/runtime/demo.rs", src);
+        assert!(
+            findings_for(&report, "safety-comment").is_empty(),
+            "{}",
+            analysis::render_human(&report)
+        );
+    }
+}
+
+#[test]
+fn safety_comment_never_fires_on_strings_or_comments() {
+    let src = "fn f() { let s = \"unsafe code\"; } // unsafe in prose\n";
+    let report = lint_one("rust/src/runtime/demo.rs", src);
+    assert!(report.findings.is_empty(), "{}", analysis::render_human(&report));
+}
+
+// ---- fault-event-parity ------------------------------------------------
+
+#[test]
+fn fault_event_parity_flags_silent_status_flips() {
+    let src = "\
+fn settle_bad(tile: &mut Tile) {
+    tile.ft = FtStatus::Corrected;
+}
+
+fn settle_good(tile: &mut Tile, log: &EventLog) {
+    tile.ft = FtStatus::Recomputed;
+    log.push(FaultEvent::recompute(tile.id));
+}
+
+fn helper_ok(tile: &Tile) -> bool {
+    tile.ft == FtStatus::Verified
+}
+";
+    let report = lint_one("rust/src/coordinator/scheduler.rs", src);
+    let hits = findings_for(&report, "fault-event-parity");
+    assert_eq!(hits.len(), 1, "{}", analysis::render_human(&report));
+    assert_eq!(hits[0].line, 1);
+    assert!(hits[0].message.contains("settle_bad"));
+    assert!(hits[0].message.contains("line 2"));
+}
+
+#[test]
+fn fault_event_parity_only_applies_to_the_scheduler() {
+    let src = "fn f(t: &mut T) { t.ft = FtStatus::Corrected; }\n";
+    let report = lint_one("rust/src/coordinator/router.rs", src);
+    assert!(findings_for(&report, "fault-event-parity").is_empty());
+}
+
+// ---- exporter-parity ---------------------------------------------------
+
+fn metrics_fixture(extra_field: &str) -> SourceFile {
+    SourceFile {
+        path: "rust/src/coordinator/metrics.rs".to_string(),
+        text: format!(
+            "use std::sync::atomic::AtomicU64;\n\
+             pub struct Metrics {{\n\
+                 pub submitted: AtomicU64,\n\
+                 {extra_field}\n\
+                 pub other: usize,\n\
+             }}\n"
+        ),
+    }
+}
+
+fn export_fixture(body: &str) -> SourceFile {
+    SourceFile {
+        path: "rust/src/telemetry/export.rs".to_string(),
+        text: body.to_string(),
+    }
+}
+
+const EXPORT_OK: &str = "\
+fn counter_list(m: &Metrics) -> Vec<(&'static str, u64)> {
+    vec![(\"submitted\", 1), (\"dropped\", 2)]
+}
+fn prometheus(m: &Metrics) -> String {
+    let _ = counter_list(m);
+    String::new()
+}
+fn json_snapshot(m: &Metrics) -> String {
+    let _ = counter_list(m);
+    String::new()
+}
+";
+
+#[test]
+fn exporter_parity_catches_unexported_counters() {
+    let report = analysis::lint(&[
+        metrics_fixture("pub dropped: AtomicU64,"),
+        export_fixture(
+            "fn counter_list(m: &Metrics) -> Vec<(&'static str, u64)> {\n\
+                 vec![(\"submitted\", 1)]\n\
+             }\n\
+             fn prometheus(m: &Metrics) -> String { let _ = counter_list(m); String::new() }\n\
+             fn json_snapshot(m: &Metrics) -> String { let _ = counter_list(m); String::new() }\n",
+        ),
+    ]);
+    let hits = findings_for(&report, "exporter-parity");
+    assert_eq!(hits.len(), 1, "{}", analysis::render_human(&report));
+    assert!(hits[0].message.contains("dropped"));
+    assert!(hits[0].path.ends_with("coordinator/metrics.rs"));
+    assert_eq!(hits[0].line, 4); // the field's line in the fixture
+}
+
+#[test]
+fn exporter_parity_requires_both_exporters_to_share_the_list() {
+    let report = analysis::lint(&[
+        metrics_fixture("pub dropped: AtomicU64,"),
+        export_fixture(
+            "fn counter_list(m: &Metrics) -> Vec<(&'static str, u64)> {\n\
+                 vec![(\"submitted\", 1), (\"dropped\", 2)]\n\
+             }\n\
+             fn prometheus(m: &Metrics) -> String { String::new() }\n\
+             fn json_snapshot(m: &Metrics) -> String { let _ = counter_list(m); String::new() }\n",
+        ),
+    ]);
+    let hits = findings_for(&report, "exporter-parity");
+    assert_eq!(hits.len(), 1, "{}", analysis::render_human(&report));
+    assert!(hits[0].message.contains("prometheus"));
+}
+
+#[test]
+fn exporter_parity_clean_when_consistent_and_noop_without_both_files() {
+    let report = analysis::lint(&[
+        metrics_fixture("pub dropped: AtomicU64,"),
+        export_fixture(EXPORT_OK),
+    ]);
+    assert!(
+        findings_for(&report, "exporter-parity").is_empty(),
+        "{}",
+        analysis::render_human(&report)
+    );
+    // scanning only one side of the pair must not fabricate findings
+    let report = analysis::lint(&[metrics_fixture("pub dropped: AtomicU64,")]);
+    assert!(findings_for(&report, "exporter-parity").is_empty());
+}
+
+// ---- baseline ----------------------------------------------------------
+
+#[test]
+fn baseline_absorbs_known_findings_and_reports_stale_entries() {
+    let src = "fn serve() {\n    x.unwrap();\n}\n";
+    let mut report = lint_one("rust/src/server/demo.rs", src);
+    assert_eq!(report.findings.len(), 1);
+    let entry = baseline::format_entry(&report.findings[0]);
+    let bl = Baseline::parse(&format!(
+        "# acknowledged debt\n{entry}\nno-lock-hot-path | gone.rs | use std::sync::Mutex;\n"
+    ));
+    let stale = analysis::apply_baseline(&mut report, &bl);
+    assert!(report.clean(), "{}", analysis::render_human(&report));
+    assert_eq!(report.baselined, 1);
+    assert_eq!(stale.len(), 1);
+    assert!(stale[0].contains("gone.rs"));
+}
+
+// ---- report formats ----------------------------------------------------
+
+#[test]
+fn json_report_lists_every_rule_and_parses() {
+    assert!(rules::RULES.len() >= 6);
+    let report = lint_one("rust/src/server/demo.rs", "fn serve() { x.unwrap(); }\n");
+    let doc = json::parse(&analysis::render_json(&report)).expect("report is valid JSON");
+    assert_eq!(doc.get("clean"), Some(&Json::Bool(false)));
+    let listed = doc.get("rules").and_then(|r| r.as_arr()).expect("rules array");
+    assert_eq!(listed.len(), rules::RULES.len());
+    let findings = doc.get("findings").and_then(|f| f.as_arr()).expect("findings");
+    assert_eq!(findings.len(), 1);
+    assert_eq!(
+        findings[0].get("rule").and_then(|r| r.as_str()),
+        Some("no-panic-hot-path")
+    );
+    assert!(findings[0].get("line").and_then(|l| l.as_usize()).is_some());
+}
+
+#[test]
+fn human_report_carries_location_and_summary() {
+    let report = lint_one("rust/src/server/demo.rs", "fn serve() { x.unwrap(); }\n");
+    let text = analysis::render_human(&report);
+    assert!(text.contains("rust/src/server/demo.rs:1: [no-panic-hot-path]"));
+    assert!(text.contains("ftlint: 1 file(s), 1 finding(s)"));
+}
+
+// ---- the live tree -----------------------------------------------------
+
+#[test]
+fn live_tree_is_clean_modulo_baseline() {
+    let src_root = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let files = analysis::collect_sources(&[src_root.to_string()])
+        .expect("scan rust/src");
+    assert!(files.len() > 20, "expected a real tree, got {} files", files.len());
+    let mut report = analysis::lint(&files);
+    let bl_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../ftlint.baseline");
+    let bl = Baseline::load(bl_path).unwrap_or_default();
+    let stale = analysis::apply_baseline(&mut report, &bl);
+    assert!(
+        report.clean(),
+        "live tree has unbaselined ftlint findings:\n{}",
+        analysis::render_human(&report)
+    );
+    assert!(stale.is_empty(), "stale baseline entries: {stale:?}");
+}
