@@ -26,9 +26,17 @@ else
 fi
 
 cargo test -q
+
+# Docs lane: the API docs must build warning-free and every doc-test
+# example in the crate (FftPlan, fft_batched_par, FftBackend, ...) must
+# actually run — docs/plan.md links into these.
+cargo doc --no-deps --release -p turbofft
+cargo test --doc -q -p turbofft
+
 cargo bench --bench hotpath -- --quick
 
-# BENCH_hotpath.json must carry the per-stage histogram section
+# BENCH_hotpath.json must carry the per-stage histogram section plus the
+# PR-10 kernel-variant columns (scalar-vs-SIMD, f32-vs-f64)
 python3 - <<'EOF'
 import json
 doc = json.load(open("BENCH_hotpath.json"))
@@ -38,7 +46,15 @@ for stage in ("encode", "verify", "correct", "recompute"):
     for key in ("count", "p50_ns", "p95_ns", "p99_ns", "max_ns"):
         assert key in cols, f"BENCH_hotpath.json stages.{stage} missing {key}"
     assert cols["count"] > 0, f"stages.{stage} recorded no samples"
-print("BENCH_hotpath.json stage columns OK")
+names = {e["name"] for e in doc["entries"]}
+for want in ("native fft 16x4096 (scalar kernel)",
+             "native fft 16x4096 (simd kernel)",
+             "native fft 16x4096 (f32)"):
+    assert want in names, f"BENCH_hotpath.json missing entry {want!r}"
+spd = doc["speedups"]
+for key in ("simd_vs_scalar_fft_16x4096", "f32_vs_f64_fft_16x4096"):
+    assert key in spd, f"BENCH_hotpath.json speedups missing {key}"
+print("BENCH_hotpath.json stage + dtype/simd columns OK")
 EOF
 
 # Server smoke: start the HTTP front end on an ephemeral port (it falls
@@ -64,6 +80,11 @@ port="$(cat "$srv_dir/port")"
 
 cargo run --release --example loadgen -- --addr "127.0.0.1:$port" \
   --rate 200 --secs 1 --n 256 --max-error-rate 0.01
+
+# one short burst pinned to the f32 wire dtype: exercises the native
+# single-precision plan path end to end through the HTTP front end
+cargo run --release --example loadgen -- --addr "127.0.0.1:$port" \
+  --rate 100 --secs 1 --n 256 --dtype f32 --max-error-rate 0.01
 
 python3 - "$port" <<'EOF'
 import json, sys, urllib.request

@@ -23,6 +23,10 @@
 //! open-loop mode is the standard practical compromise: arrivals behind
 //! schedule fire immediately rather than being dropped.
 //!
+//! `--dtype f32|f64` stamps every request body with that wire dtype so
+//! a run pins one precision arm of the serving path (omitted = server
+//! default); `ci.sh` runs one f32 burst this way.
+//!
 //! Std-only by design (the image vendors no HTTP client): the ~60-line
 //! keep-alive client below speaks exactly the Content-Length subset the
 //! server emits.
@@ -184,9 +188,16 @@ impl Client {
 }
 
 /// Deterministic request body: `batch` real signals of length `n`.
-fn make_body(rng: &mut Rng, batch: usize, n: usize) -> String {
-    let mut out = String::with_capacity(batch * n * 10 + 32);
-    out.push_str("{\"signals\":[");
+/// A non-empty `dtype` ("f32"/"f64") is forwarded on the wire so the
+/// run exercises that precision path end to end; empty means the
+/// server default.
+fn make_body(rng: &mut Rng, batch: usize, n: usize, dtype: &str) -> String {
+    let mut out = String::with_capacity(batch * n * 10 + 48);
+    out.push('{');
+    if !dtype.is_empty() {
+        out.push_str(&format!("\"dtype\":\"{dtype}\","));
+    }
+    out.push_str("\"signals\":[");
     for b in 0..batch {
         if b > 0 {
             out.push(',');
@@ -210,6 +221,7 @@ fn worker(
     secs: f64,
     batch: usize,
     n: usize,
+    dtype: &str,
     seed: u64,
 ) -> WorkerReport {
     let mut rng = Rng::new(seed);
@@ -240,7 +252,7 @@ fn worker(
                 }
             }
         }
-        let body = make_body(&mut rng, batch, n);
+        let body = make_body(&mut rng, batch, n, dtype);
         let t0 = Instant::now();
         match client.post("/v1/fft", &body) {
             Ok(200) => {
@@ -265,6 +277,13 @@ fn main() {
     let n = args.usize_or("n", 256).unwrap_or(256);
     let max_error_rate = args.f64_or("max-error-rate", 0.01).unwrap_or(0.01);
     let seed = args.u64_or("seed", 1).unwrap_or(1);
+    // wire precision: empty = server default; "f32"/"f64" go out as the
+    // request's "dtype" field so the run pins one plan-cache arm
+    let dtype = args.str_or("dtype", "");
+    if !matches!(dtype.as_str(), "" | "f32" | "f64") {
+        eprintln!("loadgen: --dtype must be f32 or f64, got {dtype:?}");
+        std::process::exit(1);
+    }
     // server-vs-client percentile tolerance for the coordinated-omission
     // cross-check; `--strict` turns drift warnings into exit code 2
     let drift_tol = args.f64_or("drift-tol", 0.25).unwrap_or(0.25);
@@ -283,13 +302,15 @@ fn main() {
             offsets.push(t);
         }
         println!(
-            "loadgen: open-loop {} arrivals over {secs}s (~{rate}/s) on {conns} conns, batch {batch} x n={n}",
-            offsets.len()
+            "loadgen: open-loop {} arrivals over {secs}s (~{rate}/s) on {conns} conns, batch {batch} x n={n}{}",
+            offsets.len(),
+            if dtype.is_empty() { String::new() } else { format!(", dtype {dtype}") }
         );
         Some((Arc::new(offsets), Arc::new(AtomicUsize::new(0)), Instant::now()))
     } else {
         println!(
-            "loadgen: closed-loop {conns} conns for {secs}s, batch {batch} x n={n}"
+            "loadgen: closed-loop {conns} conns for {secs}s, batch {batch} x n={n}{}",
+            if dtype.is_empty() { String::new() } else { format!(", dtype {dtype}") }
         );
         None
     };
@@ -299,8 +320,9 @@ fn main() {
             .map(|c| {
                 let addr = addr.clone();
                 let schedule = schedule.clone();
+                let dtype = dtype.clone();
                 scope.spawn(move || {
-                    worker(&addr, schedule, secs, batch, n, seed + c as u64)
+                    worker(&addr, schedule, secs, batch, n, &dtype, seed + c as u64)
                 })
             })
             .collect::<Vec<_>>()

@@ -4,9 +4,14 @@
 //!
 //! The FFT and detect/locate entries run in before/after pairs: the
 //! `(naive seed)` variants use the plan-free seed kernels, the unmarked
-//! names run the cached-plan engine. Results land in
-//! `BENCH_hotpath.json` (name, ns/iter, GFLOPS) for machine consumption.
-//! Pass `--quick` (or set `BENCH_QUICK`) for a 1-iteration smoke run.
+//! names run the cached-plan engine. The `(scalar kernel)` /
+//! `(simd kernel)` pair isolates the vectorized radix-4 butterflies
+//! (same plan, same sequential loop), and the `(f32)` entry runs the
+//! identical shape through the single-precision plan. Results land in
+//! `BENCH_hotpath.json` (name, ns/iter, GFLOPS, plus a `speedups`
+//! object with the simd-vs-scalar / f32-vs-f64 ratios) for machine
+//! consumption. Pass `--quick` (or set `BENCH_QUICK`) for a
+//! 1-iteration smoke run that still exercises every variant.
 
 use turbofft::coordinator::batcher::{BatchPolicy, Batcher, Pending};
 use turbofft::coordinator::request::FftRequest;
@@ -15,7 +20,7 @@ use turbofft::perfmodel::gpu::A100;
 use turbofft::runtime::{HostTensor, InjectionDescriptor, Precision, Runtime, Scheme};
 use turbofft::signal::checksum;
 use turbofft::signal::fft;
-use turbofft::signal::complex::C64;
+use turbofft::signal::complex::{cast_slice, C32, C64};
 use turbofft::signal::plan::{self, FftPlan};
 use turbofft::telemetry::Telemetry;
 use turbofft::util::bench::{self, BenchConfig, BenchResult};
@@ -61,8 +66,47 @@ fn main() -> anyhow::Result<()> {
     println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
     results.push(r);
 
+    // scalar fallback vs vectorized radix-4 butterflies: both variants
+    // run the SAME cached plan through the SAME sequential batched loop,
+    // so the ratio isolates the 4-wide SIMD lanes (no parallelism, no
+    // cache effects in the numerator only).
+    let plan4k = FftPlan::<f64>::get(4096);
+    let mut buf = x4k.clone();
+    let r = bench::run_with_work("native fft 16x4096 (scalar kernel)", &cfg,
+        flops4k, &mut || {
+            buf.copy_from_slice(&x4k);
+            for sig in buf.chunks_exact_mut(4096) {
+                plan4k.fft_inplace_scalar(sig);
+            }
+        });
+    println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+    results.push(r);
+    let r = bench::run_with_work("native fft 16x4096 (simd kernel)", &cfg,
+        flops4k, &mut || {
+            buf.copy_from_slice(&x4k);
+            for sig in buf.chunks_exact_mut(4096) {
+                plan4k.fft_inplace(sig);
+            }
+        });
+    println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+    results.push(r);
+
+    // single-precision plan at the identical shape (half the bytes
+    // streamed, twice the lanes per vector register)
+    let x4k32: Vec<C32> = cast_slice(&x4k);
+    let plan4k32 = FftPlan::<f32>::get(4096);
+    let mut buf32 = x4k32.clone();
+    let r = bench::run_with_work("native fft 16x4096 (f32)", &cfg,
+        flops4k, &mut || {
+            buf32.copy_from_slice(&x4k32);
+            for sig in buf32.chunks_exact_mut(4096) {
+                plan4k32.fft_inplace(sig);
+            }
+        });
+    println!("{}  ({:.2} GFLOPS)", r.report_line(), r.throughput() / 1e9);
+    results.push(r);
+
     // fused transform+encode (plan) over the same tile
-    let plan4k = FftPlan::get(4096);
     let mut scratch = x4k.clone();
     let r = bench::run_with_work("fused transform+encode 16x4096 tile", &cfg,
         flops4k, &mut || {
@@ -204,6 +248,20 @@ fn main() -> anyhow::Result<()> {
         println!("host detect_locate:    {:.2}x faster than naive seed",
                  naive / planned);
     }
+    println!("\n== simd vs scalar / f32 vs f64 ==");
+    if let (Some(scalar), Some(simd)) = (
+        med("native fft 16x4096 (scalar kernel)"),
+        med("native fft 16x4096 (simd kernel)"),
+    ) {
+        println!("simd vs scalar kernel: {:.2}x (target >= 1.5x at N >= 1024)",
+                 scalar / simd);
+    }
+    if let (Some(w), Some(s)) = (
+        med("native fft 16x4096 (simd kernel)"),
+        med("native fft 16x4096 (f32)"),
+    ) {
+        println!("f32 vs f64 plan:       {:.2}x", w / s);
+    }
 
     // Per-stage latency histograms: drive each pipeline stage standalone
     // and record into the same lock-free atomic histograms the serving
@@ -276,9 +334,27 @@ fn main() -> anyhow::Result<()> {
             })
             .collect(),
     );
+    let ratio = |num: &str, den: &str| {
+        match (med(num), med(den)) {
+            (Some(a), Some(b)) if b > 0.0 => a / b,
+            _ => 0.0,
+        }
+    };
+    let speedups = json::obj(vec![
+        ("simd_vs_scalar_fft_16x4096",
+         json::num(ratio("native fft 16x4096 (scalar kernel)",
+                         "native fft 16x4096 (simd kernel)"))),
+        ("f32_vs_f64_fft_16x4096",
+         json::num(ratio("native fft 16x4096 (simd kernel)",
+                         "native fft 16x4096 (f32)"))),
+        ("plan_vs_naive_fft_16x4096",
+         json::num(ratio("native fft 16x4096 (naive seed)",
+                         "native fft 16x4096"))),
+    ]);
     let doc = json::obj(vec![
         ("bench", json::s("hotpath")),
         ("entries", entries),
+        ("speedups", speedups),
         ("stages", stages),
     ]);
     std::fs::write("BENCH_hotpath.json", format!("{doc}\n"))?;

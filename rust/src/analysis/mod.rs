@@ -9,7 +9,7 @@
 //!
 //! Layout:
 //! - [`lexer`] — std-only comment/string-aware Rust tokenizer;
-//! - [`rules`] — the six invariant rules (see docs/lint.md);
+//! - [`rules`] — the seven invariant rules (see docs/lint.md);
 //! - [`baseline`] — checked-in, content-matched acknowledgement list;
 //! - this file — findings model, suppression, human/JSON reports, and
 //!   the file-tree walker shared by the binary and the meta-test in

@@ -22,7 +22,7 @@ pub struct RuleInfo {
     pub summary: &'static str,
 }
 
-pub const RULES: [RuleInfo; 6] = [
+pub const RULES: [RuleInfo; 7] = [
     RuleInfo {
         name: "no-panic-hot-path",
         summary: "unwrap/expect/panic!/unreachable! and unguarded indexing are banned on server, scheduler, and telemetry request paths",
@@ -47,6 +47,10 @@ pub const RULES: [RuleInfo; 6] = [
         name: "fault-event-parity",
         summary: "every scheduler.rs fn that flips a corrected/recomputed FtStatus must also record a FaultEvent",
     },
+    RuleInfo {
+        name: "checksum-delta-threading",
+        summary: "judge_block callers must pass a plan-derived delta (ft::delta_for / scaled_delta), never a float literal",
+    },
 ];
 
 /// Run every rule over the lexed file set.
@@ -58,6 +62,7 @@ pub fn run_all(files: &[Lexed]) -> Vec<Finding> {
         no_lock_hot_path(f, &mut out);
         safety_comment(f, &mut out);
         fault_event_parity(f, &mut out);
+        checksum_delta_threading(f, &mut out);
     }
     exporter_parity(files, &mut out);
     out
@@ -375,6 +380,63 @@ fn fault_event_parity(lx: &Lexed, out: &mut Vec<Finding>) {
                     span.name
                 ),
             ));
+        }
+    }
+}
+
+/// Rule 7: every production `judge_block(...)` call must thread a
+/// plan/precision-derived detection threshold — the variable computed by
+/// `ft::delta_for` / `ft::scaled_delta` — not a hardcoded float literal.
+/// A literal delta silently decouples detection sensitivity from the
+/// dtype's epsilon floor (an f32 tile judged at an f64-tuned delta
+/// false-positives on clean rounding noise; the converse misses faults).
+/// Test regions are exempt: fixtures pin literal deltas on purpose.
+fn checksum_delta_threading(lx: &Lexed, out: &mut Vec<Finding>) {
+    const RULE: &str = "checksum-delta-threading";
+    let toks = &lx.toks;
+    for k in 0..toks.len() {
+        let t = &toks[k];
+        if !(t.kind == TokKind::Ident && t.text == "judge_block") {
+            continue;
+        }
+        if lx.in_test(t.line) {
+            continue;
+        }
+        // a call site, not the definition or a `use` path: the next
+        // token must open the argument list, and the token before must
+        // not be `fn`
+        if !toks.get(k + 1).map(|n| n.text == "(").unwrap_or(false) {
+            continue;
+        }
+        if k > 0 && toks[k - 1].kind == TokKind::Ident && toks[k - 1].text == "fn" {
+            continue;
+        }
+        // walk the argument list with our own paren counter (Tok.depth
+        // tracks brace nesting only) and flag any float literal inside
+        let mut depth = 0usize;
+        for j in (k + 1)..toks.len().min(k + 257) {
+            let a = &toks[j];
+            if a.kind == TokKind::Punct {
+                if a.text == "(" {
+                    depth += 1;
+                } else if a.text == ")" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+            }
+            if a.kind == TokKind::Float {
+                out.push(finding(
+                    lx,
+                    RULE,
+                    a.line,
+                    format!(
+                        "literal `{}` passed to judge_block; thread the dtype-scaled threshold from ft::delta_for / ft::scaled_delta instead",
+                        a.text
+                    ),
+                ));
+            }
         }
     }
 }

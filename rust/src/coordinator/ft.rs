@@ -15,18 +15,37 @@ use std::collections::HashMap;
 
 use crate::runtime::{Entry, HostTensor, Precision, Scheme};
 use crate::signal::checksum::{self, TileMeta, Verdict};
-use crate::signal::complex::C64;
+use crate::signal::complex::{Scalar, C64};
 
-/// Scale the base detection threshold to the artifact's geometry: the
-/// clean-run residual floor grows ~ sqrt(N) * eps (longer dot products),
-/// and the f64 floor sits ~8-9 orders below f32. Raw residuals are
-/// shipped unscaled, so ROC sweeps are unaffected.
-pub fn scaled_delta(base: f64, entry: &Entry) -> f64 {
-    let size = base * (entry.n as f64 / 256.0).sqrt();
-    match entry.precision {
-        Precision::F32 => size,
-        Precision::F64 => size * 1e-8,
+/// Ratio of a dtype's machine epsilon to f32's. The base thresholds in
+/// configs are tuned against the f32 clean-residual floor (the device
+/// artifacts' precision), so f32 scales by exactly 1 and f64 by
+/// `f64::EPSILON / f32::EPSILON` ≈ 1.9e-9 — derived from the dtype, not
+/// a hardcoded per-precision literal, so any future `Scalar` gets a
+/// correct floor for free.
+fn eps_ratio<T: Scalar>() -> f64 {
+    T::EPSILON.to_f64() / f32::EPSILON as f64
+}
+
+/// Scale the base detection threshold to a transform's geometry and
+/// dtype: the clean-run residual floor grows ~ sqrt(N) * eps (longer
+/// dot products), and the dtype term is the machine-epsilon ratio from
+/// [`eps_ratio`]. Raw residuals are shipped unscaled, so ROC sweeps are
+/// unaffected. This is the single source of detection thresholds —
+/// `judge_block` callers must thread a delta derived here (or from a
+/// plan) rather than a float literal; the `checksum-delta-threading`
+/// ftlint rule enforces that.
+pub fn delta_for(base: f64, n: usize, precision: Precision) -> f64 {
+    let size = base * (n as f64 / 256.0).sqrt();
+    match precision {
+        Precision::F32 => size * eps_ratio::<f32>(),
+        Precision::F64 => size * eps_ratio::<f64>(),
     }
+}
+
+/// [`delta_for`] keyed by an artifact entry's geometry.
+pub fn scaled_delta(base: f64, entry: &Entry) -> f64 {
+    delta_for(base, entry.n, entry.precision)
 }
 
 /// Judgment for one ABFT tile of a batch execution.

@@ -64,8 +64,8 @@ impl KernelShape {
     /// single launch, radix-4 butterflies, twiddles preloaded from the
     /// plan table. Lets the bench report what the same transform would
     /// achieve on a modelled GPU next to the measured host numbers.
-    pub fn from_host_plan(
-        plan: &crate::signal::plan::FftPlan,
+    pub fn from_host_plan<T: crate::signal::complex::Scalar>(
+        plan: &crate::signal::plan::FftPlan<T>,
         batch: usize,
         bs: usize,
         f64p: bool,

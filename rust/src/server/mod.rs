@@ -31,11 +31,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::coordinator::ft;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::{Coordinator, FftResponse, FtStatus};
 use crate::runtime::Precision;
 use crate::signal::checksum::{self, Verdict};
-use crate::signal::complex::C64;
+use crate::signal::complex::{cast_slice, C32, C64};
 use crate::signal::plan::FftPlan;
 
 pub use pool::{Server, ServerHandle};
@@ -90,6 +91,26 @@ pub enum BackendError {
 
 /// What the HTTP routes serve FFTs from. Implementations must be safe
 /// to call from every worker thread concurrently.
+///
+/// # Examples
+///
+/// Serving a batch through the stub-checkout [`HostPlanBackend`] (the
+/// same trait the HTTP routes call):
+///
+/// ```
+/// use std::time::Duration;
+/// use turbofft::runtime::Precision;
+/// use turbofft::server::{FftBackend, HostPlanBackend};
+/// use turbofft::signal::complex::C64;
+///
+/// let backend = HostPlanBackend::new(4e-4);
+/// let results = backend.submit_many(
+///     Precision::F32, // served natively by FftPlan<f32>
+///     vec![vec![C64::ONE; 8]],
+///     Duration::from_secs(1),
+/// );
+/// assert!(results[0].is_ok());
+/// ```
 pub trait FftBackend: Send + Sync {
     /// The metrics bundle all counters/histograms/spans flow through
     /// (one instance shared with the scrape endpoints).
@@ -180,9 +201,13 @@ impl FftBackend for CoordinatorBackend {
 
 /// Stub-checkout backend: serves any power-of-two size through the
 /// cached host plan's fused transform+encode, judging the same two-sided
-/// checksums the device kernels emit. Telemetry parity with the
-/// coordinator path: spans, stage histograms, latency, and counters all
-/// flow through the shared [`Metrics`].
+/// checksums the device kernels emit. The requested [`Precision`] is
+/// honoured natively: f32 requests narrow once at the wire boundary and
+/// run the whole transform+encode through `FftPlan<f32>` (the wire type
+/// stays `C64`), with the detection threshold scaled per dtype by
+/// `ft::delta_for`. Telemetry parity with the coordinator path: spans,
+/// stage histograms, latency, and counters all flow through the shared
+/// [`Metrics`].
 pub struct HostPlanBackend {
     metrics: Arc<Metrics>,
     delta: f64,
@@ -206,7 +231,7 @@ impl FftBackend for HostPlanBackend {
 
     fn submit_many(
         &self,
-        _precision: Precision,
+        precision: Precision,
         signals: Vec<Vec<C64>>,
         deadline: Duration,
     ) -> Vec<Result<FftResponse, BackendError>> {
@@ -227,15 +252,31 @@ impl FftBackend for HostPlanBackend {
             let n = data.len();
 
             let sp = tele.spans.start("transform_encode", Some(root_id));
-            let plan = FftPlan::get(n);
-            let mut y = data;
-            let meta = plan.transform_encode_inplace(&mut y, 1);
+            let (y, meta) = match precision {
+                Precision::F64 => {
+                    let plan = FftPlan::<f64>::get(n);
+                    let mut y = data;
+                    let meta = plan.transform_encode_inplace(&mut y, 1);
+                    (y, meta)
+                }
+                Precision::F32 => {
+                    // Native f32 path: one narrowing pass at the wire
+                    // boundary, then the f32 plan end to end (NaNs
+                    // survive the cast, so corrupt input still trips
+                    // the checksum below).
+                    let plan = FftPlan::<f32>::get(n);
+                    let mut y32: Vec<C32> = cast_slice(&data);
+                    let meta = plan.transform_encode_inplace(&mut y32, 1);
+                    (cast_slice(&y32), meta)
+                }
+            };
             let end = tele.now_ns();
             tele.stage_encode.record(end.saturating_sub(sp.start_ns));
             tele.spans.finish_at(sp, end);
 
             let sp = tele.spans.start("checksum_verify", Some(root_id));
-            let verdict = checksum::judge_block(&meta, self.delta, 1);
+            let delta = ft::delta_for(self.delta, n, precision);
+            let verdict = checksum::judge_block(&meta, delta, 1);
             let end = tele.now_ns();
             tele.stage_verify.record(end.saturating_sub(sp.start_ns));
             tele.spans.finish_at(sp, end);
@@ -283,6 +324,8 @@ mod tests {
         let be = HostPlanBackend::new(4e-4);
         let mut rng = Rng::new(9);
         let x = signals::gaussian_batch(&mut rng, 1, 256);
+        // f32 requests run natively in f32: f32-sized error vs the f64
+        // reference, still checksum-verified.
         let got = be.submit_many(
             Precision::F32,
             vec![x.clone()],
@@ -292,13 +335,26 @@ mod tests {
         let resp = got[0].as_ref().expect("host fft succeeds");
         assert_eq!(resp.ft, FtStatus::Verified);
         let want = fft::fft(&x);
-        let err = complex::max_abs_diff(&resp.data, &want)
+        let err32 = complex::max_abs_diff(&resp.data, &want)
             / complex::max_abs(&want).max(1e-30);
-        assert!(err < 1e-9, "err {err}");
+        assert!(err32 < 1e-5, "err {err32}");
+        // f64 requests keep the full-precision path.
+        let got = be.submit_many(
+            Precision::F64,
+            vec![x.clone()],
+            Duration::from_secs(1),
+        );
+        let resp = got[0].as_ref().expect("host fft succeeds");
+        assert_eq!(resp.ft, FtStatus::Verified);
+        let err64 = complex::max_abs_diff(&resp.data, &want)
+            / complex::max_abs(&want).max(1e-30);
+        assert!(err64 < 1e-9, "err {err64}");
+        // and the f32 path really computed in f32, not upcast f64
+        assert!(err32 > err64, "f32 path suspiciously exact");
         let m = be.metrics();
-        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
-        assert!(m.latency_snapshot().count() == 1);
-        assert!(m.telemetry.stage_encode.count() == 1);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert!(m.latency_snapshot().count() == 2);
+        assert!(m.telemetry.stage_encode.count() == 2);
         assert!(m.telemetry.spans.total_recorded() >= 3);
     }
 

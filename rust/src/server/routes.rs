@@ -12,11 +12,13 @@
 //! | `POST /admin/shutdown` | begin graceful drain                               |
 //!
 //! The wire schema of `POST /v1/fft` is documented in `docs/server.md`:
-//! `{"signals": [[x0, x1, ...], ...], "precision": "f32"}` where each
+//! `{"signals": [[x0, x1, ...], ...], "dtype": "f32"}` where each
 //! sample is either a bare number (real input) or a `[re, im]` pair, and
-//! each signal length must be a power of two. Responses carry the
-//! transformed samples plus the fault-tolerance verdict (`ft`), the
-//! checksum residual, and the per-request latency.
+//! each signal length must be a power of two. `"dtype"` selects the
+//! element precision the backend computes in (`"precision"` is accepted
+//! as an alias; stating both with different values is a `400`).
+//! Responses carry the transformed samples plus the fault-tolerance
+//! verdict (`ft`), the checksum residual, and the per-request latency.
 
 use std::sync::atomic::Ordering;
 
@@ -101,7 +103,9 @@ fn healthz(shared: &Shared) -> Response {
         Some(Ok(resp)) => {
             let err = complex::max_abs_diff(&resp.data, &want)
                 / complex::max_abs(&want).max(1e-30);
-            if err < 1e-6 {
+            // The selftest runs at the serving default dtype (f32, now
+            // computed natively in f32), so the bound is f32-sized.
+            if err < 1e-5 {
                 Response::text(200, "ok\n")
             } else {
                 Response::error(
@@ -204,13 +208,7 @@ fn parse_fft_body(body: &[u8]) -> Result<(Precision, Vec<Vec<C64>>), String> {
         return Err("empty body; expected {\"signals\": [[...], ...]}".into());
     }
     let doc = json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
-    let precision = match doc.get("precision") {
-        None => Precision::F32,
-        Some(v) => {
-            let s = v.as_str().ok_or("\"precision\" must be a string")?;
-            Precision::parse(s).map_err(|e| e.to_string())?
-        }
-    };
+    let precision = parse_dtype(&doc)?;
     let signals = doc
         .get("signals")
         .ok_or("missing \"signals\" field")?
@@ -246,6 +244,32 @@ fn parse_fft_body(body: &[u8]) -> Result<(Precision, Vec<Vec<C64>>), String> {
         out.push(data);
     }
     Ok((precision, out))
+}
+
+/// Element precision of the request: `"dtype"` (canonical) or
+/// `"precision"` (pre-PR-10 alias), defaulting to f32 — the serving
+/// default the device artifacts are built at. Stating both with
+/// different values is rejected rather than silently picking one.
+fn parse_dtype(doc: &Json) -> Result<Precision, String> {
+    let field = |key: &str| -> Result<Option<Precision>, String> {
+        match doc.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| format!("\"{key}\" must be a string"))?;
+                Precision::parse(s).map(Some).map_err(|e| e.to_string())
+            }
+        }
+    };
+    match (field("dtype")?, field("precision")?) {
+        (Some(d), Some(p)) if d != p => Err(format!(
+            "\"dtype\" ({d}) conflicts with \"precision\" ({p})"
+        )),
+        (Some(d), _) => Ok(d),
+        (None, Some(p)) => Ok(p),
+        (None, None) => Ok(Precision::F32),
+    }
 }
 
 fn parse_sample(v: &Json) -> Option<C64> {
@@ -313,8 +337,10 @@ mod tests {
     fn fft_roundtrip_matches_reference() {
         let sh = shared();
         let x: Vec<f64> = (0..16).map(|j| (j as f64 * 0.37).sin()).collect();
+        // dtype f64 keeps the reference-exact path (and exercises the
+        // "dtype" spelling of the wire field).
         let body = format!(
-            "{{\"signals\":[[{}]]}}",
+            "{{\"dtype\":\"f64\",\"signals\":[[{}]]}}",
             x.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
         );
         let resp = handle(&sh, &post("/v1/fft", &body));
@@ -346,6 +372,44 @@ mod tests {
         let body = r#"{"precision":"f64","signals":[[[1,0],[0,1],[-1,0],[0,-1]]]}"#;
         let resp = handle(&sh, &post("/v1/fft", body));
         assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        // dtype and precision may agree; dtype alone works too
+        for body in [
+            r#"{"dtype":"f64","precision":"f64","signals":[[1,2]]}"#,
+            r#"{"dtype":"f32","signals":[[1,2]]}"#,
+        ] {
+            let resp = handle(&sh, &post("/v1/fft", body));
+            assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        }
+    }
+
+    #[test]
+    fn dtype_f32_is_served_natively_within_f32_tolerance() {
+        let sh = shared();
+        let x: Vec<f64> = (0..64).map(|j| (j as f64 * 0.61).cos()).collect();
+        let body = format!(
+            "{{\"dtype\":\"f32\",\"signals\":[[{}]]}}",
+            x.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+        );
+        let resp = handle(&sh, &post("/v1/fft", &body));
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let doc = json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let r0 = &doc.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("ft").unwrap().as_str(), Some("verified"));
+        let out: Vec<C64> = r0
+            .get("output")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| {
+                let p = p.as_arr().unwrap();
+                C64::new(p[0].as_f64().unwrap(), p[1].as_f64().unwrap())
+            })
+            .collect();
+        let xin: Vec<C64> = x.iter().map(|&re| C64::new(re, 0.0)).collect();
+        let want = fft::fft(&xin);
+        let err = complex::max_abs_diff(&out, &want) / complex::max_abs(&want);
+        assert!(err < 1e-5, "err {err}");
     }
 
     #[test]
@@ -360,6 +424,8 @@ mod tests {
             "{\"signals\":1}",
             "{\"nope\":[]}",
             "{\"precision\":\"f16\",\"signals\":[[1,2]]}",
+            "{\"dtype\":\"f16\",\"signals\":[[1,2]]}",
+            "{\"dtype\":\"f32\",\"precision\":\"f64\",\"signals\":[[1,2]]}",
         ] {
             let resp = handle(&sh, &post("/v1/fft", body));
             assert_eq!(resp.status, 400, "accepted {body:?}");
@@ -368,7 +434,7 @@ mod tests {
             .metrics()
             .server_malformed
             .load(Ordering::Relaxed);
-        assert_eq!(malformed, 8);
+        assert_eq!(malformed, 10);
     }
 
     #[test]

@@ -6,23 +6,29 @@
 //! used by the fault manager on live traffic and by the unit/property
 //! tests as an independent oracle against the python implementation.
 
-use super::complex::C64;
+use super::complex::{Complex, Scalar, C64};
 
-/// Wang's encoding vector e1[k] = exp(-2*pi*i*(k mod 3)/3).
-pub fn wang_e1(n: usize) -> Vec<C64> {
+/// Wang's encoding vector e1[k] = exp(-2*pi*i*(k mod 3)/3), at any
+/// [`Scalar`] dtype (computed in f64, narrowed per element).
+pub fn wang_e1<T: Scalar>(n: usize) -> Vec<Complex<T>> {
     (0..n)
-        .map(|k| C64::cis(-2.0 * std::f64::consts::PI * ((k % 3) as f64) / 3.0))
+        .map(|k| {
+            C64::cis(-2.0 * std::f64::consts::PI * ((k % 3) as f64) / 3.0).cast()
+        })
         .collect()
 }
 
-/// Left checksum row a = e1^T W via the geometric closed form (O(N)).
-pub fn ew_row(n: usize) -> Vec<C64> {
+/// Left checksum row a = e1^T W via the geometric closed form (O(N)),
+/// at any [`Scalar`] dtype. The closed-form division always runs in f64
+/// and narrows at the end, so an f32 row carries correctly-rounded
+/// entries instead of f32-accumulated trig/division error.
+pub fn ew_row<T: Scalar>(n: usize) -> Vec<Complex<T>> {
     let rho_n = C64::cis(-2.0 * std::f64::consts::PI * (n as f64 / 3.0));
     (0..n)
         .map(|m| {
             let theta = m as f64 / n as f64 + 1.0 / 3.0;
             let rho = C64::cis(-2.0 * std::f64::consts::PI * theta);
-            (C64::ONE - rho_n) / (C64::ONE - rho)
+            ((C64::ONE - rho_n) / (C64::ONE - rho)).cast()
         })
         .collect()
 }

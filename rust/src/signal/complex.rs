@@ -1,38 +1,138 @@
-//! Minimal complex arithmetic (substrate for `num-complex`).
+//! Minimal complex arithmetic (substrate for `num-complex`), generic
+//! over element precision.
 //!
-//! The coordinator keeps all host-side signal data as `C64` (f64 pairs)
-//! and converts at the runtime boundary to the artifact's precision.
+//! The coordinator keeps all host-side signal data as [`C64`] (f64
+//! pairs) and converts at the runtime boundary to the artifact's
+//! precision. The [`Scalar`] trait abstracts the element type so the
+//! plan engine (`signal::plan`) can run the same cached-table radix-4
+//! kernel over `f32` and `f64` lanes; [`C32`] is the f32 instantiation
+//! used by the server's native-f32 serving path.
 
 use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
 
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
-pub struct C64 {
-    pub re: f64,
-    pub im: f64,
+/// Element precision for [`Complex`] and the plan engine.
+///
+/// Implemented by `f32` and `f64` only. Everything the generic FFT and
+/// checksum code needs lives here: ring ops (via the supertraits), the
+/// machine epsilon used to derive dtype-appropriate detection
+/// thresholds, and lossless-enough conversions through `f64` (twiddle
+/// tables and checksum rows are always *computed* in f64 and narrowed,
+/// so an f32 plan carries correctly-rounded constants instead of
+/// accumulating f32 trig error).
+pub trait Scalar:
+    Copy
+    + std::fmt::Debug
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Machine epsilon of this dtype; detection thresholds scale with
+    /// the ratio `EPSILON / f32::EPSILON` (see `coordinator::ft::delta_for`).
+    const EPSILON: Self;
+    /// Wire name of this dtype (`"f32"` / `"f64"`), matching
+    /// `runtime::manifest::Precision` spellings.
+    const DTYPE: &'static str;
+
+    /// Narrow (or pass through) an `f64` value.
+    fn from_f64(v: f64) -> Self;
+    /// Widen to `f64` (exact for both implementors).
+    fn to_f64(self) -> f64;
+    /// `sqrt(self^2 + other^2)` without intermediate overflow.
+    fn hypot(self, other: Self) -> Self;
+    /// Neither NaN nor infinite.
+    fn is_finite(self) -> bool;
 }
 
-impl C64 {
-    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
-    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f64::EPSILON;
+    const DTYPE: &'static str = "f64";
 
-    pub fn new(re: f64, im: f64) -> Self {
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn hypot(self, other: Self) -> Self {
+        f64::hypot(self, other)
+    }
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f32::EPSILON;
+    const DTYPE: &'static str = "f32";
+
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn hypot(self, other: Self) -> Self {
+        f32::hypot(self, other)
+    }
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+/// A complex number over a [`Scalar`] element type.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex<T> {
+    pub re: T,
+    pub im: T,
+}
+
+/// Double-precision complex — the coordinator's wire type.
+pub type C64 = Complex<f64>;
+/// Single-precision complex — the native element of `FftPlan<f32>`.
+pub type C32 = Complex<f32>;
+
+impl<T: Scalar> Complex<T> {
+    pub const ZERO: Complex<T> = Complex { re: T::ZERO, im: T::ZERO };
+    pub const ONE: Complex<T> = Complex { re: T::ONE, im: T::ZERO };
+
+    pub fn new(re: T, im: T) -> Self {
         Self { re, im }
     }
 
-    /// exp(i * theta)
+    /// exp(i * theta). The trig runs in f64 and narrows, so `C32::cis`
+    /// returns the correctly-rounded f32 twiddle rather than one with
+    /// f32 trig error.
     pub fn cis(theta: f64) -> Self {
-        Self { re: theta.cos(), im: theta.sin() }
+        Self { re: T::from_f64(theta.cos()), im: T::from_f64(theta.sin()) }
     }
 
     pub fn conj(self) -> Self {
         Self { re: self.re, im: -self.im }
     }
 
-    pub fn abs(self) -> f64 {
+    pub fn abs(self) -> T {
         self.re.hypot(self.im)
     }
 
-    pub fn abs2(self) -> f64 {
+    pub fn abs2(self) -> T {
         self.re * self.re + self.im * self.im
     }
 
@@ -40,65 +140,75 @@ impl C64 {
         self.re.is_finite() && self.im.is_finite()
     }
 
-    pub fn scale(self, s: f64) -> Self {
+    pub fn scale(self, s: T) -> Self {
         Self { re: self.re * s, im: self.im * s }
     }
-}
 
-impl Add for C64 {
-    type Output = C64;
-    fn add(self, o: C64) -> C64 {
-        C64::new(self.re + o.re, self.im + o.im)
+    /// Convert element precision (widen or narrow through f64).
+    pub fn cast<U: Scalar>(self) -> Complex<U> {
+        Complex { re: U::from_f64(self.re.to_f64()), im: U::from_f64(self.im.to_f64()) }
     }
 }
 
-impl AddAssign for C64 {
-    fn add_assign(&mut self, o: C64) {
+impl<T: Scalar> Add for Complex<T> {
+    type Output = Complex<T>;
+    fn add(self, o: Complex<T>) -> Complex<T> {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl<T: Scalar> AddAssign for Complex<T> {
+    fn add_assign(&mut self, o: Complex<T>) {
         self.re += o.re;
         self.im += o.im;
     }
 }
 
-impl Sub for C64 {
-    type Output = C64;
-    fn sub(self, o: C64) -> C64 {
-        C64::new(self.re - o.re, self.im - o.im)
+impl<T: Scalar> Sub for Complex<T> {
+    type Output = Complex<T>;
+    fn sub(self, o: Complex<T>) -> Complex<T> {
+        Complex::new(self.re - o.re, self.im - o.im)
     }
 }
 
-impl SubAssign for C64 {
-    fn sub_assign(&mut self, o: C64) {
+impl<T: Scalar> SubAssign for Complex<T> {
+    fn sub_assign(&mut self, o: Complex<T>) {
         self.re -= o.re;
         self.im -= o.im;
     }
 }
 
-impl Mul for C64 {
-    type Output = C64;
-    fn mul(self, o: C64) -> C64 {
-        C64::new(
+impl<T: Scalar> Mul for Complex<T> {
+    type Output = Complex<T>;
+    fn mul(self, o: Complex<T>) -> Complex<T> {
+        Complex::new(
             self.re * o.re - self.im * o.im,
             self.re * o.im + self.im * o.re,
         )
     }
 }
 
-impl Div for C64 {
-    type Output = C64;
-    fn div(self, o: C64) -> C64 {
+impl<T: Scalar> Div for Complex<T> {
+    type Output = Complex<T>;
+    fn div(self, o: Complex<T>) -> Complex<T> {
         let d = o.abs2();
-        C64::new(
+        Complex::new(
             (self.re * o.re + self.im * o.im) / d,
             (self.im * o.re - self.re * o.im) / d,
         )
     }
 }
 
-impl Neg for C64 {
-    type Output = C64;
-    fn neg(self) -> C64 {
-        C64::new(-self.re, -self.im)
+impl<T: Scalar> Neg for Complex<T> {
+    type Output = Complex<T>;
+    fn neg(self) -> Complex<T> {
+        Complex::new(-self.re, -self.im)
     }
+}
+
+/// Convert a complex slice between element precisions.
+pub fn cast_slice<A: Scalar, B: Scalar>(x: &[Complex<A>]) -> Vec<Complex<B>> {
+    x.iter().map(|c| c.cast()).collect()
 }
 
 /// Interleave a complex slice into [re, im, re, im, ...] as `f32`.
@@ -131,20 +241,21 @@ pub fn unpack_f64(x: &[f64]) -> Vec<C64> {
     x.chunks_exact(2).map(|p| C64::new(p[0], p[1])).collect()
 }
 
-/// max |a - b| over two complex slices. NaN-propagating: `f64::max`
-/// would silently drop NaN diffs, letting corrupted data compare as
-/// 0.0, so any non-finite element poisons the result to NaN (which
-/// fails every `< threshold` assertion).
-pub fn max_abs_diff(a: &[C64], b: &[C64]) -> f64 {
+/// max |a - b| over two complex slices, in f64 regardless of the input
+/// dtype (thresholds are always expressed in f64). NaN-propagating:
+/// `f64::max` would silently drop NaN diffs, letting corrupted data
+/// compare as 0.0, so any non-finite element poisons the result to NaN
+/// (which fails every `< threshold` assertion).
+pub fn max_abs_diff<T: Scalar>(a: &[Complex<T>], b: &[Complex<T>]) -> f64 {
     a.iter()
         .zip(b)
-        .map(|(x, y)| (*x - *y).abs())
+        .map(|(x, y)| (*x - *y).abs().to_f64())
         .fold(0.0, |m, v| if m.is_nan() || v.is_nan() { f64::NAN } else { m.max(v) })
 }
 
-/// max |v| over a complex slice.
-pub fn max_abs(a: &[C64]) -> f64 {
-    a.iter().map(|x| x.abs()).fold(0.0, f64::max)
+/// max |v| over a complex slice, in f64.
+pub fn max_abs<T: Scalar>(a: &[Complex<T>]) -> f64 {
+    a.iter().map(|x| x.abs().to_f64()).fold(0.0, f64::max)
 }
 
 #[cfg(test)]
@@ -163,10 +274,40 @@ mod tests {
     }
 
     #[test]
+    fn field_ops_f32() {
+        let a = C32::new(1.0, 2.0);
+        let b = C32::new(3.0, -1.0);
+        assert_eq!(a + b, C32::new(4.0, 1.0));
+        assert_eq!(a * b, C32::new(5.0, 5.0));
+        let q = (a * b) / b;
+        assert!((q - a).abs() < 1e-5);
+    }
+
+    #[test]
     fn cis_unit_circle() {
         let w = C64::cis(std::f64::consts::FRAC_PI_2);
         assert!((w - C64::new(0.0, 1.0)).abs() < 1e-12);
         assert!((C64::cis(0.3).abs() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cis_f32_is_correctly_rounded_f64_trig() {
+        // C32::cis must equal the narrowed f64 result, not f32 trig.
+        for k in 0..17 {
+            let theta = -2.0 * std::f64::consts::PI * k as f64 / 17.0;
+            let w = C32::cis(theta);
+            assert_eq!(w.re, theta.cos() as f32);
+            assert_eq!(w.im, theta.sin() as f32);
+        }
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let x = vec![C64::new(1.5, -2.5), C64::new(0.0, 3.0)];
+        let narrow: Vec<C32> = cast_slice(&x);
+        let wide: Vec<C64> = cast_slice(&narrow);
+        // 1.5/-2.5/3.0 are exactly representable in f32.
+        assert_eq!(wide, x);
     }
 
     #[test]
@@ -182,6 +323,7 @@ mod tests {
         assert!(C64::new(1.0, 2.0).is_finite());
         assert!(!C64::new(f64::INFINITY, 0.0).is_finite());
         assert!(!C64::new(0.0, f64::NAN).is_finite());
+        assert!(!C32::new(0.0, f32::NAN).is_finite());
     }
 
     #[test]

@@ -1,12 +1,14 @@
-//! Plan-based FFT engine (host hot path).
+//! Plan-based FFT engine (host hot path), generic over element
+//! precision and vectorized.
 //!
 //! The seed transform recomputed every twiddle factor with a `cis` call
 //! inside the butterfly loop and rebuilt the checksum encoding vectors on
 //! every `detect_locate_host` call. An [`FftPlan`] hoists all of that
 //! per-size state — the twiddle table, the bit-reversal permutation, and
 //! the checksum encoding rows `e1^T W` / `e1` — into a per-process cache
-//! keyed by `n`, and drives a radix-4 (radix-2^2) butterfly kernel over
-//! the cached tables. On top of the single-signal kernel it layers:
+//! keyed by `(n, dtype)`, and drives a radix-4 (radix-2^2) butterfly
+//! kernel over the cached tables. On top of the single-signal kernel it
+//! layers:
 //!
 //! * [`FftPlan::fft_batched_par_inplace`] — batch fan-out across scoped
 //!   std threads with a flop-count crossover so small batches stay
@@ -22,45 +24,112 @@
 //! it runs directly on base-2 bit-reversed data (no base-4 digit
 //! reversal needed); an odd log2(n) is handled by one leading radix-2
 //! stage whose twiddles are all 1.
+//!
+//! # Precision
+//!
+//! [`FftPlan`] is generic over [`Scalar`] (`f32` / `f64`; defaults to
+//! `f64`, the coordinator's wire precision). Both instantiations share
+//! this one implementation; plans are cached per `(n, dtype)` and all
+//! tables are computed in f64 and narrowed, so an `FftPlan<f32>`
+//! carries correctly-rounded constants. Detection thresholds must scale
+//! with the dtype's machine epsilon — see
+//! `coordinator::ft::delta_for`, never a hardcoded per-dtype literal.
+//!
+//! # SIMD lane layout
+//!
+//! [`FftPlan::fft_inplace`] runs the radix-4 butterflies through a
+//! 4-wide lane-unrolled kernel over structure-of-arrays temporaries:
+//! the stage's four operand rows are split (`split_at_mut`) so the
+//! compiler can prove disjointness, twiddles come from a per-stage
+//! *packed* table (`[w^2j, w^j, w^3j]` per butterfly, copied from the
+//! full-circle table at build time) so loads are sequential instead of
+//! strided gathers, and each arithmetic phase is a fixed-trip-count
+//! lane loop over `[T; 4]` arrays that the auto-vectorizer maps onto
+//! vector registers. Every output element is computed with exactly the
+//! same operation order as the scalar kernel, so
+//! [`FftPlan::fft_inplace_scalar`] (kept as the fallback path and the
+//! differential-test oracle) is **bit-identical**, not merely close —
+//! `tests/dtype_suite.rs` asserts equality with `==` per size and
+//! dtype.
+//!
+//! # Examples
+//!
+//! ```
+//! use turbofft::signal::complex::{C32, C64};
+//! use turbofft::signal::plan::FftPlan;
+//!
+//! // f64 plan (the default dtype): an impulse transforms to all-ones.
+//! let plan = FftPlan::<f64>::get(8);
+//! let mut x = vec![C64::ZERO; 8];
+//! x[0] = C64::ONE;
+//! plan.fft_inplace(&mut x);
+//! assert!(x.iter().all(|v| (*v - C64::ONE).abs() < 1e-12));
+//!
+//! // f32 plan: same engine, separate cache entry, f32-sized error.
+//! let plan32 = FftPlan::<f32>::get(8);
+//! let mut y = vec![C32::ZERO; 8];
+//! y[0] = C32::ONE;
+//! plan32.fft_inplace(&mut y);
+//! assert!(y.iter().all(|v| (*v - C32::ONE).abs() < 1e-6f32));
+//! ```
 
+#![deny(missing_docs)]
+
+use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::checksum::{self, TileMeta};
-use super::complex::C64;
+use super::complex::{Complex, Scalar};
 
 /// Below this many flops (5·N·log2N·batch) the scoped-thread fan-out in
 /// [`FftPlan::fft_batched_par_inplace`] costs more than it saves.
 const PAR_MIN_WORK: f64 = 1.0e6;
 
-/// Precomputed per-size FFT state. Obtain via [`FftPlan::get`]; plans are
-/// immutable and shared process-wide behind an `Arc`.
-pub struct FftPlan {
+/// Lane width of the unrolled butterfly kernel: 4 complex elements per
+/// block, i.e. one AVX2 register of f64 re/im parts per SoA array (two
+/// such blocks per AVX-512 register; f32 packs twice as many).
+const LANES: usize = 4;
+
+/// Accumulator fan-out of [`dot_lanes`]: independent partial sums break
+/// the loop-carried add dependency so the FMA units stay busy.
+const DOT_LANES: usize = 4;
+
+/// Precomputed per-size FFT state for one element dtype. Obtain via
+/// [`FftPlan::get`]; plans are immutable and shared process-wide behind
+/// an `Arc`, cached per `(n, dtype)`.
+pub struct FftPlan<T: Scalar = f64> {
     n: usize,
     log2n: u32,
     /// Full-circle table: `twiddles[j] = exp(-2·pi·i·j / n)`.
-    twiddles: Vec<C64>,
+    twiddles: Vec<Complex<T>>,
+    /// Per-radix-4-stage packed twiddles, `[w^2j, w^j, w^3j]` per
+    /// butterfly `j`, *copied* from `twiddles` at build time so the
+    /// vector kernel reads the bit-identical values sequentially.
+    stage_tw: Vec<Vec<Complex<T>>>,
     /// Base-2 bit-reversal permutation of `0..n`.
     bitrev: Vec<u32>,
     /// Left checksum row `a = e1^T W` (input-side encoding vector).
-    ew_row: Vec<C64>,
+    ew_row: Vec<Complex<T>>,
     /// Wang's `e1[k] = exp(-2·pi·i·(k mod 3)/3)` (output-side vector).
-    wang_e1: Vec<C64>,
+    wang_e1: Vec<Complex<T>>,
 }
 
-fn plan_cache() -> &'static Mutex<HashMap<usize, Arc<FftPlan>>> {
-    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+type AnyPlan = Arc<dyn Any + Send + Sync>;
+
+fn plan_cache() -> &'static Mutex<HashMap<(usize, TypeId), AnyPlan>> {
+    static CACHE: OnceLock<Mutex<HashMap<(usize, TypeId), AnyPlan>>> = OnceLock::new();
     CACHE.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
 static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
 static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 
-/// Process-wide plan-cache counters `(hits, misses)`, exported by
-/// `telemetry::export`. A miss means a full table build (twiddles,
-/// bit-reversal, checksum rows), so a nonzero steady-state miss rate
-/// signals an unwarmed or thrashing serving mix.
+/// Process-wide plan-cache counters `(hits, misses)` summed across both
+/// dtypes, exported by `telemetry::export`. A miss means a full table
+/// build (twiddles, bit-reversal, checksum rows), so a nonzero
+/// steady-state miss rate signals an unwarmed or thrashing serving mix.
 pub fn cache_stats() -> (u64, u64) {
     (
         CACHE_HITS.load(Ordering::Relaxed),
@@ -68,25 +137,45 @@ pub fn cache_stats() -> (u64, u64) {
     )
 }
 
-impl FftPlan {
-    /// Fetch (or build and cache) the plan for size `n`.
-    pub fn get(n: usize) -> Arc<FftPlan> {
+impl<T: Scalar> FftPlan<T> {
+    /// Fetch (or build and cache) the plan for size `n` at dtype `T`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use turbofft::signal::plan::FftPlan;
+    ///
+    /// let a = FftPlan::<f64>::get(64);
+    /// let b = FftPlan::<f64>::get(64);
+    /// assert!(Arc::ptr_eq(&a, &b)); // cached per (n, dtype)
+    /// ```
+    pub fn get(n: usize) -> Arc<FftPlan<T>> {
         assert!(n.is_power_of_two(), "fft size {n} not a power of two");
-        if let Some(plan) = plan_cache().lock().unwrap().get(&n) {
+        let key = (n, TypeId::of::<T>());
+        let hit = plan_cache().lock().unwrap().get(&key).cloned();
+        if let Some(plan) = hit.and_then(|p| p.downcast::<FftPlan<T>>().ok()) {
             CACHE_HITS.fetch_add(1, Ordering::Relaxed);
-            return plan.clone();
+            return plan;
         }
         // Build outside the lock; concurrent builders converge on
         // whichever plan lands first.
         CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
-        let plan = Arc::new(FftPlan::build(n));
-        plan_cache().lock().unwrap().entry(n).or_insert(plan).clone()
+        let plan = Arc::new(FftPlan::<T>::build(n));
+        let mut cache = plan_cache().lock().unwrap();
+        let entry = cache
+            .entry(key)
+            .or_insert_with(|| plan.clone() as AnyPlan);
+        // The TypeId key guarantees the downcast succeeds; the fallback
+        // just avoids a panic path in the cache.
+        entry.clone().downcast::<FftPlan<T>>().unwrap_or(plan)
     }
 
-    fn build(n: usize) -> FftPlan {
+    fn build(n: usize) -> FftPlan<T> {
         let log2n = n.trailing_zeros();
         let step = -2.0 * std::f64::consts::PI / n as f64;
-        let twiddles = (0..n).map(|j| C64::cis(step * j as f64)).collect();
+        let twiddles: Vec<Complex<T>> =
+            (0..n).map(|j| Complex::cis(step * j as f64)).collect();
         let bitrev = (0..n)
             .map(|i| {
                 if log2n == 0 {
@@ -96,58 +185,129 @@ impl FftPlan {
                 }
             })
             .collect();
+        // Packed per-stage twiddles, mirroring the kernel's stage walk
+        // exactly (same odd-log2 peel, same stride per stage).
+        let mut stage_tw = Vec::new();
+        let mut size = if log2n % 2 == 1 { 2usize } else { 1usize };
+        while size < n {
+            let m = size * 4;
+            let stride = n / m;
+            let mut tws = Vec::with_capacity(3 * size);
+            for j in 0..size {
+                tws.push(twiddles[2 * j * stride]);
+                tws.push(twiddles[j * stride]);
+                tws.push(twiddles[3 * j * stride]);
+            }
+            stage_tw.push(tws);
+            size = m;
+        }
         FftPlan {
             n,
             log2n,
             twiddles,
+            stage_tw,
             bitrev,
             ew_row: checksum::ew_row(n),
             wang_e1: checksum::wang_e1(n),
         }
     }
 
+    /// Transform size this plan was built for.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// `log2(n)`.
     pub fn log2n(&self) -> u32 {
         self.log2n
     }
 
     /// Cached input-side encoding row `e1^T W`.
-    pub fn ew_row(&self) -> &[C64] {
+    pub fn ew_row(&self) -> &[Complex<T>] {
         &self.ew_row
     }
 
     /// Cached output-side encoding vector `e1`.
-    pub fn wang_e1(&self) -> &[C64] {
+    pub fn wang_e1(&self) -> &[Complex<T>] {
         &self.wang_e1
     }
 
-    /// Forward transform of one signal, in place (no scaling).
-    pub fn fft_inplace(&self, x: &mut [C64]) {
-        let n = self.n;
-        assert_eq!(x.len(), n, "signal length != plan size {n}");
-        if n <= 1 {
-            return;
-        }
-        for i in 0..n {
+    fn bit_reverse(&self, x: &mut [Complex<T>]) {
+        for i in 0..self.n {
             let j = self.bitrev[i] as usize;
             if j > i {
                 x.swap(i, j);
             }
         }
+    }
+
+    // Odd number of radix-2 stages: peel the first one (its only
+    // twiddle is 1), leaving an even count for the radix-4 stages.
+    // Shared verbatim by the vector and scalar kernels so they stay
+    // bit-identical.
+    fn radix2_peel(x: &mut [Complex<T>]) {
+        for pair in x.chunks_exact_mut(2) {
+            let u = pair[0];
+            let t = pair[1];
+            pair[0] = u + t;
+            pair[1] = u - t;
+        }
+    }
+
+    /// Forward transform of one signal, in place (no scaling), through
+    /// the lane-unrolled vector kernel. Bit-identical to
+    /// [`FftPlan::fft_inplace_scalar`] by construction (same per-element
+    /// operation order, same twiddle values).
+    pub fn fft_inplace(&self, x: &mut [Complex<T>]) {
+        let n = self.n;
+        assert_eq!(x.len(), n, "signal length != plan size {n}");
+        if n <= 1 {
+            return;
+        }
+        self.bit_reverse(x);
+        let mut size = 1usize;
+        if self.log2n % 2 == 1 {
+            Self::radix2_peel(x);
+            size = 2;
+        }
+        for tws in &self.stage_tw {
+            let m = size * 4;
+            for chunk in x.chunks_exact_mut(m) {
+                // Split the chunk into the stage's four operand rows so
+                // the optimizer sees disjoint, bounds-check-free lanes.
+                let (q0, rest) = chunk.split_at_mut(size);
+                let (q1, rest) = rest.split_at_mut(size);
+                let (q2, q3) = rest.split_at_mut(size);
+                let mut j = 0usize;
+                while j + LANES <= size {
+                    bf4_lanes(q0, q1, q2, q3, tws, j);
+                    j += LANES;
+                }
+                while j < size {
+                    bf4(q0, q1, q2, q3, tws, j);
+                    j += 1;
+                }
+            }
+            size = m;
+        }
+    }
+
+    /// Forward transform of one signal, in place, through the scalar
+    /// radix-4 kernel (strided reads of the full-circle twiddle table).
+    /// Kept as the portable fallback and as the differential-test
+    /// oracle for the vector kernel; `benches/hotpath.rs` reports the
+    /// scalar-vs-SIMD ratio.
+    pub fn fft_inplace_scalar(&self, x: &mut [Complex<T>]) {
+        let n = self.n;
+        assert_eq!(x.len(), n, "signal length != plan size {n}");
+        if n <= 1 {
+            return;
+        }
+        self.bit_reverse(x);
         let tw = &self.twiddles;
         let mut size = 1usize;
         if self.log2n % 2 == 1 {
-            // Odd number of radix-2 stages: peel the first one (its only
-            // twiddle is 1), leaving an even count for the radix-4 loop.
-            for pair in x.chunks_exact_mut(2) {
-                let u = pair[0];
-                let t = pair[1];
-                pair[0] = u + t;
-                pair[1] = u - t;
-            }
+            Self::radix2_peel(x);
             size = 2;
         }
         while size < n {
@@ -169,7 +329,7 @@ impl FftPlan {
                     let c = t2 + t3;
                     let d = t2 - t3;
                     // -i·d
-                    let dr = C64::new(d.im, -d.re);
+                    let dr = Complex::new(d.im, -d.re);
                     chunk[j] = a + c;
                     chunk[j + size] = b + dr;
                     chunk[j + 2 * size] = a - c;
@@ -181,34 +341,42 @@ impl FftPlan {
     }
 
     /// Forward transform returning a new vector.
-    pub fn fft(&self, x: &[C64]) -> Vec<C64> {
+    pub fn fft(&self, x: &[Complex<T>]) -> Vec<Complex<T>> {
         let mut out = x.to_vec();
         self.fft_inplace(&mut out);
         out
     }
 
+    /// Forward transform returning a new vector, through the scalar
+    /// fallback kernel (differential-test oracle).
+    pub fn fft_scalar(&self, x: &[Complex<T>]) -> Vec<Complex<T>> {
+        let mut out = x.to_vec();
+        self.fft_inplace_scalar(&mut out);
+        out
+    }
+
     /// Inverse transform (with 1/N scaling), in place and allocation-free
     /// via the conjugation identity `ifft(x) = conj(fft(conj(x)))/N`.
-    pub fn ifft_inplace(&self, x: &mut [C64]) {
+    pub fn ifft_inplace(&self, x: &mut [Complex<T>]) {
         for v in x.iter_mut() {
             *v = v.conj();
         }
         self.fft_inplace(x);
-        let s = 1.0 / self.n as f64;
+        let s = T::from_f64(1.0 / self.n as f64);
         for v in x.iter_mut() {
             *v = v.conj().scale(s);
         }
     }
 
     /// Inverse transform returning a new vector (single allocation).
-    pub fn ifft(&self, x: &[C64]) -> Vec<C64> {
+    pub fn ifft(&self, x: &[Complex<T>]) -> Vec<Complex<T>> {
         let mut out = x.to_vec();
         self.ifft_inplace(&mut out);
         out
     }
 
     /// Batched forward transform over contiguous signals, in place.
-    pub fn fft_batched_inplace(&self, x: &mut [C64]) {
+    pub fn fft_batched_inplace(&self, x: &mut [Complex<T>]) {
         assert_eq!(x.len() % self.n, 0);
         for sig in x.chunks_exact_mut(self.n) {
             self.fft_inplace(sig);
@@ -220,7 +388,7 @@ impl FftPlan {
     /// to [`FftPlan::fft_batched_inplace`]: each signal runs the same
     /// sequential kernel, only the assignment of signals to threads
     /// changes.
-    pub fn fft_batched_par_inplace(&self, x: &mut [C64]) {
+    pub fn fft_batched_par_inplace(&self, x: &mut [Complex<T>]) {
         let n = self.n;
         assert_eq!(x.len() % n, 0);
         let batch = x.len() / n;
@@ -248,30 +416,35 @@ impl FftPlan {
     /// tile: in the same traversal that transforms each signal, dot the
     /// *input* against the cached `e1^T W` row (plain and `(b+1)`-weighted
     /// sums -> `a2`/`a3`) and the *output* against the cached `e1` vector
-    /// (-> `s2`/`s3`). Returns the same [`TileMeta`] the detached
+    /// (-> `s2`/`s3`). The dots ride the same lane-unrolled accumulators
+    /// as the vector FFT kernel ([`dot_lanes`]'s independent partial
+    /// sums), and the whole encode runs in the tile's native dtype;
+    /// only the final residual scalars widen to f64 for the returned
+    /// [`TileMeta`], so the decision layer (`checksum::judge_block`) is
+    /// dtype-agnostic. Returns the same meta the detached
     /// [`checksum::detect_locate_host`] path produces, without
     /// materialising the `c2`/`c3`/`yc2`/`yc3` composites.
-    pub fn transform_encode_inplace(&self, x: &mut [C64], bs: usize) -> TileMeta {
+    pub fn transform_encode_inplace(&self, x: &mut [Complex<T>], bs: usize) -> TileMeta {
         assert_eq!(x.len(), self.n * bs, "tile length != n*bs");
-        let mut a2 = C64::ZERO;
-        let mut a3 = C64::ZERO;
-        let mut s2 = C64::ZERO;
-        let mut s3 = C64::ZERO;
+        let mut a2 = Complex::<T>::ZERO;
+        let mut a3 = Complex::<T>::ZERO;
+        let mut s2 = Complex::<T>::ZERO;
+        let mut s3 = Complex::<T>::ZERO;
         for (b, sig) in x.chunks_exact_mut(self.n).enumerate() {
-            let w = (b + 1) as f64;
-            let d = dot(&self.ew_row, sig);
+            let w = T::from_f64((b + 1) as f64);
+            let d = dot_lanes(&self.ew_row, sig);
             a2 += d;
             a3 += d.scale(w);
             self.fft_inplace(sig);
-            let sy = dot(&self.wang_e1, sig);
+            let sy = dot_lanes(&self.wang_e1, sig);
             s2 += sy;
             s3 += sy.scale(w);
         }
         TileMeta {
-            r2: s2 - a2,
-            a2_abs: a2.abs(),
-            r3: s3 - a3,
-            a3_abs: a3.abs(),
+            r2: (s2 - a2).cast(),
+            a2_abs: a2.abs().to_f64(),
+            r3: (s3 - a3).cast(),
+            a3_abs: a3.abs().to_f64(),
         }
     }
 
@@ -280,41 +453,172 @@ impl FftPlan {
     /// (up to float reassociation) but with zero allocations: the per-
     /// signal dots are accumulated straight into the four scalars instead
     /// of materialising composite vectors.
-    pub fn detect_locate(&self, x: &[C64], y: &[C64], bs: usize) -> TileMeta {
+    pub fn detect_locate(&self, x: &[Complex<T>], y: &[Complex<T>], bs: usize) -> TileMeta {
         let n = self.n;
         assert_eq!(x.len(), n * bs);
         assert_eq!(y.len(), n * bs);
-        let mut a2 = C64::ZERO;
-        let mut a3 = C64::ZERO;
-        let mut s2 = C64::ZERO;
-        let mut s3 = C64::ZERO;
+        let mut a2 = Complex::<T>::ZERO;
+        let mut a3 = Complex::<T>::ZERO;
+        let mut s2 = Complex::<T>::ZERO;
+        let mut s3 = Complex::<T>::ZERO;
         for (b, (xs, ys)) in x.chunks_exact(n).zip(y.chunks_exact(n)).enumerate() {
-            let w = (b + 1) as f64;
-            let d = dot(&self.ew_row, xs);
+            let w = T::from_f64((b + 1) as f64);
+            let d = dot_lanes(&self.ew_row, xs);
             a2 += d;
             a3 += d.scale(w);
-            let sy = dot(&self.wang_e1, ys);
+            let sy = dot_lanes(&self.wang_e1, ys);
             s2 += sy;
             s3 += sy.scale(w);
         }
         TileMeta {
-            r2: s2 - a2,
-            a2_abs: a2.abs(),
-            r3: s3 - a3,
-            a3_abs: a3.abs(),
+            r2: (s2 - a2).cast(),
+            a2_abs: a2.abs().to_f64(),
+            r3: (s3 - a3).cast(),
+            a3_abs: a3.abs().to_f64(),
         }
     }
 }
 
-fn dot(u: &[C64], v: &[C64]) -> C64 {
-    u.iter().zip(v).fold(C64::ZERO, |acc, (a, b)| acc + *a * *b)
+/// One radix-4 butterfly at offset `j`, reading the packed stage table
+/// (`[w^2j, w^j, w^3j]` per `j`). Scalar-tail body of the vector kernel
+/// — the exact expression set of [`FftPlan::fft_inplace_scalar`]'s loop.
+#[inline(always)]
+fn bf4<T: Scalar>(
+    q0: &mut [Complex<T>],
+    q1: &mut [Complex<T>],
+    q2: &mut [Complex<T>],
+    q3: &mut [Complex<T>],
+    tws: &[Complex<T>],
+    j: usize,
+) {
+    let t0 = q0[j];
+    let t1 = q1[j] * tws[3 * j];
+    let t2 = q2[j] * tws[3 * j + 1];
+    let t3 = q3[j] * tws[3 * j + 2];
+    let a = t0 + t1;
+    let b = t0 - t1;
+    let c = t2 + t3;
+    let d = t2 - t3;
+    let dr = Complex::new(d.im, -d.re);
+    q0[j] = a + c;
+    q1[j] = b + dr;
+    q2[j] = a - c;
+    q3[j] = b - dr;
+}
+
+/// [`LANES`] radix-4 butterflies at offsets `j..j+LANES`, phase-split
+/// over structure-of-arrays `[T; LANES]` temporaries. Each phase is a
+/// fixed-trip lane loop over disjoint arrays — the shape the
+/// auto-vectorizer lowers to packed mul/add — and every element goes
+/// through the identical operation order as [`bf4`], so the result is
+/// bit-identical to the scalar kernel.
+#[inline(always)]
+fn bf4_lanes<T: Scalar>(
+    q0: &mut [Complex<T>],
+    q1: &mut [Complex<T>],
+    q2: &mut [Complex<T>],
+    q3: &mut [Complex<T>],
+    tws: &[Complex<T>],
+    j: usize,
+) {
+    let z = [T::ZERO; LANES];
+    // Gather phase: deinterleave the four operand rows and the packed
+    // twiddles into SoA lane arrays.
+    let (mut x0r, mut x0i) = (z, z);
+    let (mut x1r, mut x1i) = (z, z);
+    let (mut x2r, mut x2i) = (z, z);
+    let (mut x3r, mut x3i) = (z, z);
+    let (mut w1r, mut w1i) = (z, z);
+    let (mut w2r, mut w2i) = (z, z);
+    let (mut w3r, mut w3i) = (z, z);
+    for l in 0..LANES {
+        let jj = j + l;
+        x0r[l] = q0[jj].re;
+        x0i[l] = q0[jj].im;
+        x1r[l] = q1[jj].re;
+        x1i[l] = q1[jj].im;
+        x2r[l] = q2[jj].re;
+        x2i[l] = q2[jj].im;
+        x3r[l] = q3[jj].re;
+        x3i[l] = q3[jj].im;
+        w1r[l] = tws[3 * jj].re;
+        w1i[l] = tws[3 * jj].im;
+        w2r[l] = tws[3 * jj + 1].re;
+        w2i[l] = tws[3 * jj + 1].im;
+        w3r[l] = tws[3 * jj + 2].re;
+        w3i[l] = tws[3 * jj + 2].im;
+    }
+    // Twiddle phase: three complex multiplies per lane, written as
+    // (re·re − im·im, re·im + im·re) exactly like `Complex::mul`.
+    let (mut t1r, mut t1i) = (z, z);
+    let (mut t2r, mut t2i) = (z, z);
+    let (mut t3r, mut t3i) = (z, z);
+    for l in 0..LANES {
+        t1r[l] = x1r[l] * w1r[l] - x1i[l] * w1i[l];
+        t1i[l] = x1r[l] * w1i[l] + x1i[l] * w1r[l];
+        t2r[l] = x2r[l] * w2r[l] - x2i[l] * w2i[l];
+        t2i[l] = x2r[l] * w2i[l] + x2i[l] * w2r[l];
+        t3r[l] = x3r[l] * w3r[l] - x3i[l] * w3i[l];
+        t3i[l] = x3r[l] * w3i[l] + x3i[l] * w3r[l];
+    }
+    // Combine + scatter phase: the two fused radix-2 layers, with the
+    // -i rotation folded into the lane selection (d.im, -d.re).
+    for l in 0..LANES {
+        let jj = j + l;
+        let (ar, ai) = (x0r[l] + t1r[l], x0i[l] + t1i[l]);
+        let (br, bi) = (x0r[l] - t1r[l], x0i[l] - t1i[l]);
+        let (cr, ci) = (t2r[l] + t3r[l], t2i[l] + t3i[l]);
+        let (dr, di) = (t2r[l] - t3r[l], t2i[l] - t3i[l]);
+        q0[jj] = Complex::new(ar + cr, ai + ci);
+        q1[jj] = Complex::new(br + di, bi - dr);
+        q2[jj] = Complex::new(ar - cr, ai - ci);
+        q3[jj] = Complex::new(br - di, bi + dr);
+    }
+}
+
+/// Lane-unrolled complex dot product: [`DOT_LANES`] independent
+/// accumulators over the main body, reduced lane-major, then a scalar
+/// tail. Deterministic summation order (lane 0..3 partials, then tail),
+/// shared by the fused encode and the detached detect so both sides of
+/// a differential comparison see the same rounding.
+fn dot_lanes<T: Scalar>(u: &[Complex<T>], v: &[Complex<T>]) -> Complex<T> {
+    let len = u.len().min(v.len());
+    let body = len - len % DOT_LANES;
+    let mut acc = [Complex::<T>::ZERO; DOT_LANES];
+    let mut i = 0usize;
+    while i < body {
+        for l in 0..DOT_LANES {
+            acc[l] += u[i + l] * v[i + l];
+        }
+        i += DOT_LANES;
+    }
+    let mut s = Complex::<T>::ZERO;
+    for a in acc {
+        s += a;
+    }
+    for k in body..len {
+        s += u[k] * v[k];
+    }
+    s
 }
 
 /// Batched forward FFT through the cached plan, parallel when worthwhile.
 /// Drop-in for [`super::fft::fft_batched`] with identical per-signal
 /// results.
-pub fn fft_batched_par(x: &[C64], n: usize) -> Vec<C64> {
-    let plan = FftPlan::get(n);
+///
+/// # Examples
+///
+/// ```
+/// use turbofft::signal::complex::C64;
+/// use turbofft::signal::plan::fft_batched_par;
+///
+/// let x = vec![C64::ONE; 2 * 8]; // two constant signals of length 8
+/// let y = fft_batched_par(&x, 8);
+/// assert!((y[0].re - 8.0).abs() < 1e-12); // DC bin gets the full mass
+/// assert!(y[1].abs() < 1e-12);
+/// ```
+pub fn fft_batched_par<T: Scalar>(x: &[Complex<T>], n: usize) -> Vec<Complex<T>> {
+    let plan = FftPlan::<T>::get(n);
     let mut out = x.to_vec();
     plan.fft_batched_par_inplace(&mut out);
     out
@@ -323,7 +627,7 @@ pub fn fft_batched_par(x: &[C64], n: usize) -> Vec<C64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::signal::complex::max_abs_diff;
+    use crate::signal::complex::{max_abs_diff, C32, C64};
     use crate::signal::fft::dft_naive;
     use crate::util::rng::Rng;
 
@@ -343,11 +647,40 @@ mod tests {
     }
 
     #[test]
-    fn plans_are_cached_per_size() {
-        let a = FftPlan::get(64);
-        let b = FftPlan::get(64);
+    fn vector_kernel_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(45);
+        for n in [1usize, 2, 4, 8, 16, 64, 256, 1024] {
+            let x = randv(&mut rng, n);
+            let plan = FftPlan::<f64>::get(n);
+            assert!(plan.fft(&x) == plan.fft_scalar(&x), "n={n}");
+        }
+    }
+
+    #[test]
+    fn plans_are_cached_per_size_and_dtype() {
+        let a = FftPlan::<f64>::get(64);
+        let b = FftPlan::<f64>::get(64);
         assert!(Arc::ptr_eq(&a, &b));
-        assert!(!Arc::ptr_eq(&a, &FftPlan::get(128)));
+        assert!(!Arc::ptr_eq(&a, &FftPlan::<f64>::get(128)));
+        // The f32 plan of the same size is a distinct cache entry.
+        let c = FftPlan::<f32>::get(64);
+        let d = FftPlan::<f32>::get(64);
+        assert!(Arc::ptr_eq(&c, &d));
+        assert_eq!(c.n(), a.n());
+    }
+
+    #[test]
+    fn f32_plan_tracks_f64_within_f32_tolerance() {
+        let mut rng = Rng::new(46);
+        let n = 256;
+        let x = randv(&mut rng, n);
+        let x32: Vec<C32> = crate::signal::complex::cast_slice(&x);
+        let y64 = FftPlan::<f64>::get(n).fft(&x);
+        let y32 = FftPlan::<f32>::get(n).fft(&x32);
+        let back: Vec<C64> = crate::signal::complex::cast_slice(&y32);
+        let scale = crate::signal::complex::max_abs(&y64).max(1.0);
+        let err = max_abs_diff(&back, &y64) / scale;
+        assert!(err < 1e-5, "relative err={err}");
     }
 
     #[test]
@@ -399,6 +732,6 @@ mod tests {
     #[test]
     #[should_panic(expected = "power of two")]
     fn rejects_non_pow2() {
-        FftPlan::get(12);
+        FftPlan::<f64>::get(12);
     }
 }

@@ -1,0 +1,143 @@
+//! Cross-precision property suite for the generic plan engine (PR 10):
+//! the f32 plan against the f64 oracle across every power-of-two size,
+//! bit-identity of the SIMD butterfly kernel vs the scalar fallback at
+//! both dtypes, checksum detection parity (clean tiles stay clean at
+//! dtype-scaled deltas; injected faults are detected and located
+//! identically at f32 and f64), and the per-dtype plan cache.
+
+use turbofft::coordinator::ft;
+use turbofft::runtime::Precision;
+use turbofft::signal::checksum::{self, Verdict};
+use turbofft::signal::complex::{cast_slice, max_abs, max_abs_diff, C32, C64};
+use turbofft::signal::plan::{self, FftPlan};
+use turbofft::util::rng::Rng;
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<C64> {
+    (0..n).map(|_| C64::new(rng.gaussian(), rng.gaussian())).collect()
+}
+
+/// The serving-default base threshold (HostPlanBackend's delta).
+const BASE_DELTA: f64 = 4e-4;
+
+#[test]
+fn f32_plan_matches_f64_oracle_all_pow2_sizes() {
+    let mut rng = Rng::new(901);
+    let mut n = 1usize;
+    while n <= 4096 {
+        let x64 = randv(&mut rng, n);
+        let x32: Vec<C32> = cast_slice(&x64);
+        let y64 = FftPlan::<f64>::get(n).fft(&x64);
+        let y32: Vec<C64> = cast_slice(&FftPlan::<f32>::get(n).fft(&x32));
+        let scale = max_abs(&y64).max(1.0);
+        let err = max_abs_diff(&y32, &y64);
+        // f32 rounding grows with transform depth: one lost bit per
+        // stage in the worst case, a few ulps in practice.
+        let tol = 1e-5 * (n.max(2) as f64).log2() * scale;
+        assert!(err < tol, "n={n} err={err} tol={tol}");
+        n *= 2;
+    }
+}
+
+#[test]
+fn simd_kernel_bit_identical_to_scalar_both_dtypes() {
+    let mut rng = Rng::new(902);
+    for n in [1usize, 2, 4, 8, 16, 64, 256, 1024, 4096] {
+        let x64 = randv(&mut rng, n);
+        let x32: Vec<C32> = cast_slice(&x64);
+        let p64 = FftPlan::<f64>::get(n);
+        assert!(
+            p64.fft(&x64) == p64.fft_scalar(&x64),
+            "n={n}: f64 SIMD kernel diverged from scalar fallback"
+        );
+        let p32 = FftPlan::<f32>::get(n);
+        assert!(
+            p32.fft(&x32) == p32.fft_scalar(&x32),
+            "n={n}: f32 SIMD kernel diverged from scalar fallback"
+        );
+    }
+}
+
+#[test]
+fn clean_tiles_judge_clean_at_dtype_scaled_deltas() {
+    let mut rng = Rng::new(903);
+    for (n, bs) in [(256usize, 8usize), (1024, 16)] {
+        let x64 = randv(&mut rng, n * bs);
+        let x32: Vec<C32> = cast_slice(&x64);
+
+        let mut y64 = x64.clone();
+        let m64 = FftPlan::<f64>::get(n).transform_encode_inplace(&mut y64, bs);
+        let d64 = ft::delta_for(BASE_DELTA, n, Precision::F64);
+        assert_eq!(
+            checksum::judge_block(&m64, d64, bs),
+            Verdict::Clean,
+            "n={n}: clean f64 tile flagged (resid={}, delta={d64})",
+            m64.residual()
+        );
+
+        let mut y32 = x32.clone();
+        let m32 = FftPlan::<f32>::get(n).transform_encode_inplace(&mut y32, bs);
+        let d32 = ft::delta_for(BASE_DELTA, n, Precision::F32);
+        assert_eq!(
+            checksum::judge_block(&m32, d32, bs),
+            Verdict::Clean,
+            "n={n}: clean f32 tile flagged (resid={}, delta={d32})",
+            m32.residual()
+        );
+
+        // the f64 threshold is eps-ratio tighter, never looser
+        assert!(d64 < d32, "d64={d64} not tighter than d32={d32}");
+    }
+}
+
+#[test]
+fn injected_faults_detected_and_located_identically_across_dtypes() {
+    let mut rng = Rng::new(904);
+    let (n, bs) = (512usize, 8usize);
+    let x64 = randv(&mut rng, n * bs);
+    let x32: Vec<C32> = cast_slice(&x64);
+    let p64 = FftPlan::<f64>::get(n);
+    let p32 = FftPlan::<f32>::get(n);
+    let mut clean64 = x64.clone();
+    p64.fft_batched_inplace(&mut clean64);
+    let mut clean32 = x32.clone();
+    p32.fft_batched_inplace(&mut clean32);
+    // fault magnitude pinned to the tile's own checksum scale so the
+    // relative residual clears both dtype-scaled thresholds with margin
+    let meta0 = p64.detect_locate(&x64, &clean64, bs);
+    let mag = 0.05 * meta0.a2_abs.max(1.0);
+    let d64 = ft::delta_for(BASE_DELTA, n, Precision::F64);
+    let d32 = ft::delta_for(BASE_DELTA, n, Precision::F32);
+    for victim in [0usize, 3, bs - 1] {
+        let mut y64 = clean64.clone();
+        y64[victim * n + 17] += C64::new(mag, -0.6 * mag);
+        let v64 = checksum::judge_block(&p64.detect_locate(&x64, &y64, bs), d64, bs);
+
+        let mut y32 = clean32.clone();
+        y32[victim * n + 17] += C32::new(mag as f32, (-0.6 * mag) as f32);
+        let v32 = checksum::judge_block(&p32.detect_locate(&x32, &y32, bs), d32, bs);
+
+        assert_eq!(v64, v32, "victim {victim}: dtypes disagree");
+        match v64 {
+            Verdict::Corrupted { signal } => assert_eq!(signal, victim),
+            v => panic!("victim {victim}: fault not located, verdict {v:?}"),
+        }
+    }
+}
+
+#[test]
+fn plan_cache_is_keyed_per_dtype() {
+    let (h0, _m0) = plan::cache_stats();
+    let a = FftPlan::<f64>::get(8192);
+    let b = FftPlan::<f64>::get(8192);
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "f64 plan not shared");
+    let c = FftPlan::<f32>::get(8192);
+    let d = FftPlan::<f32>::get(8192);
+    assert!(std::sync::Arc::ptr_eq(&c, &d), "f32 plan not shared");
+    // both dtypes built real tables for the same n
+    assert_eq!(a.n(), c.n());
+    assert_eq!(a.ew_row().len(), c.ew_row().len());
+    let (h1, _m1) = plan::cache_stats();
+    // the two repeat gets above are guaranteed hits (counters are
+    // global and monotonic, so >= not ==)
+    assert!(h1 >= h0 + 2, "hits {h0} -> {h1}");
+}

@@ -240,6 +240,76 @@ fn fault_event_parity_only_applies_to_the_scheduler() {
     assert!(findings_for(&report, "fault-event-parity").is_empty());
 }
 
+// ---- checksum-delta-threading ------------------------------------------
+
+#[test]
+fn delta_threading_flags_literal_deltas_and_accepts_derived_ones() {
+    let bad = "\
+fn settle(meta: &TileMeta, bs: usize) -> Verdict {
+    checksum::judge_block(meta, 1e-6, bs)
+}
+";
+    let report = lint_one("rust/src/coordinator/demo.rs", bad);
+    let hits = findings_for(&report, "checksum-delta-threading");
+    assert_eq!(hits.len(), 1, "{}", analysis::render_human(&report));
+    assert_eq!(hits[0].line, 2);
+    assert!(hits[0].message.contains("1e-6"));
+
+    // literals hiding in nested argument expressions are still literals
+    let nested = "\
+fn settle(meta: &TileMeta, n: usize, bs: usize, p: Precision) -> Verdict {
+    checksum::judge_block(meta, ft::delta_for(4e-4, n, p), bs)
+}
+";
+    let report = lint_one("rust/src/coordinator/demo.rs", nested);
+    assert_eq!(
+        findings_for(&report, "checksum-delta-threading").len(),
+        1,
+        "{}",
+        analysis::render_human(&report)
+    );
+
+    // a threaded, plan-derived delta is the blessed shape — and the
+    // definition of judge_block itself is never a call site
+    let good = "\
+fn judge_block(meta: &TileMeta, delta: f64, bs: usize) -> Verdict {
+    Verdict::Clean
+}
+
+fn settle(meta: &TileMeta, n: usize, bs: usize, p: Precision) -> Verdict {
+    let delta = ft::delta_for(base_delta(), n, p);
+    checksum::judge_block(meta, delta, bs)
+}
+";
+    let report = lint_one("rust/src/coordinator/demo.rs", good);
+    assert!(
+        findings_for(&report, "checksum-delta-threading").is_empty(),
+        "{}",
+        analysis::render_human(&report)
+    );
+}
+
+#[test]
+fn delta_threading_exempts_tests_and_honors_allow() {
+    let src = "\
+fn settle(meta: &TileMeta, bs: usize) -> Verdict {
+    // ftlint: allow(checksum-delta-threading): calibration CLI pins its delta
+    checksum::judge_block(meta, 5e-4, bs)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = checksum::judge_block(&meta, 1e-6, 8);
+    }
+}
+";
+    let report = lint_one("rust/src/coordinator/demo.rs", src);
+    assert!(report.findings.is_empty(), "{}", analysis::render_human(&report));
+    assert_eq!(report.suppressed, 1);
+}
+
 // ---- exporter-parity ---------------------------------------------------
 
 fn metrics_fixture(extra_field: &str) -> SourceFile {

@@ -152,8 +152,8 @@ fn host_recompute_self_checks() {
 
 #[test]
 fn plan_cache_returns_shared_instances() {
-    let a = FftPlan::get(2048);
-    let b = FftPlan::get(2048);
+    let a = FftPlan::<f64>::get(2048);
+    let b = FftPlan::<f64>::get(2048);
     assert!(std::sync::Arc::ptr_eq(&a, &b));
     assert_eq!(a.n(), 2048);
     assert_eq!(a.log2n(), 11);

@@ -156,8 +156,10 @@ fn fft_roundtrip_matches_reference_transform() {
     let (server, _) = start(ServerConfig::default());
     let n = 64;
     let x: Vec<f64> = (0..n).map(|j| (j as f64 * 0.711).cos()).collect();
+    // dtype f64 keeps the reference-exact path; the default (f32) is
+    // served natively in f32 and covered by the routes unit tests.
     let body = format!(
-        "{{\"signals\":[[{}]]}}",
+        "{{\"dtype\":\"f64\",\"signals\":[[{}]]}}",
         x.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
     );
     let r = post(&server, "/v1/fft", &body);
